@@ -1,0 +1,21 @@
+"""Fig. 7 reproduction: fusion-candidate statistics vs chain length —
+unique candidates, total instances, deterministic (PS=1) fused chains, and
+K_eager, for the two CPU-bound workloads (GPT2, XLM-R)."""
+from __future__ import annotations
+
+from benchmarks.common import build_skip, csv_row
+
+LENGTHS = (2, 4, 8, 16, 32, 64, 128, 256)
+MODELS = ("gpt2", "xlm-roberta-base")
+
+
+def run() -> list[str]:
+    rows = []
+    for model in MODELS:
+        skip = build_skip(model)
+        for res in skip.recommend_sweep(LENGTHS):
+            rows.append(csv_row(
+                f"chain_candidates/{model}/L{res.length}", 0.0,
+                f"unique={res.n_unique};instances={res.n_instances};"
+                f"fused={res.c_fused};k_eager={res.k_eager}"))
+    return rows

@@ -1,0 +1,24 @@
+"""Fig. 8 reproduction: idealized launch-saving speedup (Eqs. 7-8) vs chain
+length for GPT2 and XLM-RoBERTa."""
+from __future__ import annotations
+
+from benchmarks.common import build_skip, csv_row
+
+LENGTHS = (2, 4, 8, 16, 32, 64, 128, 256)
+MODELS = ("gpt2", "xlm-roberta-base")
+
+
+def run() -> list[str]:
+    rows = []
+    for model in MODELS:
+        skip = build_skip(model)
+        best = 0.0
+        for res in skip.recommend_sweep(LENGTHS):
+            best = max(best, res.speedup)
+            rows.append(csv_row(
+                f"ideal_speedup/{model}/L{res.length}", 0.0,
+                f"k_eager={res.k_eager};k_fused={res.k_fused};"
+                f"speedup={res.speedup:.2f}"))
+        rows.append(csv_row(f"ideal_speedup/{model}/best", 0.0,
+                            f"speedup={best:.2f}"))
+    return rows

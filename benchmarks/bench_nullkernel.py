@@ -1,0 +1,45 @@
+"""Table V reproduction: nullKernel launch overhead per platform.
+
+The host column is MEASURED on this machine (the real dispatch cost of a
+null JAX op — the quantity the paper isolates with cudaLaunchKernel); the
+three GPU platforms report the paper's measured constants, which the
+device model uses for simulation.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.core.device_model import PLATFORMS
+
+
+def measure_null_dispatch(repeats: int = 2000) -> float:
+    """Median dispatch time of a trivial jitted op (seconds)."""
+    f = jax.jit(lambda x: x)
+    x = jnp.zeros((8,), jnp.float32)
+    f(x).block_until_ready()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        y = f(x)
+        times.append(time.perf_counter() - t0)
+        y.block_until_ready()
+    times.sort()
+    return times[len(times) // 2]
+
+
+def run() -> list[str]:
+    rows = []
+    host_ns = measure_null_dispatch() * 1e9
+    rows.append(csv_row("nullkernel_launch/jax_host_measured", host_ns / 1e3,
+                        f"launch_ns={host_ns:.0f}"))
+    for name, spec in PLATFORMS.items():
+        rows.append(csv_row(
+            f"nullkernel_launch/{name}", spec.launch_overhead_ns / 1e3,
+            f"launch_ns={spec.launch_overhead_ns:.1f};"
+            f"duration_ns={spec.null_duration_ns:.1f};src="
+            + ("paper_tableV" if name != "TPU-v5e" else "model")))
+    return rows

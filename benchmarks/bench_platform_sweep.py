@@ -1,0 +1,47 @@
+"""Figs. 10/11 reproduction: prefill latency (TTFT), GPU idle and CPU idle
+vs batch size for all four paper workloads on the three platforms —
+crossover points (CP) between LC and CC included."""
+from __future__ import annotations
+
+from benchmarks.common import build_skip, csv_row
+from repro.configs import PAPER_WORKLOADS
+
+BATCHES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+PLATS = ("Intel+H100", "AMD+A100", "GH200")
+
+
+def run() -> list[str]:
+    rows = []
+    for model in PAPER_WORKLOADS:
+        skip = build_skip(model)
+        per_plat = {}
+        for plat in PLATS:
+            reps = [skip.report(plat, b, use_host_scale=False) for b in BATCHES]
+            per_plat[plat] = reps
+            curve = ";".join(f"b{b}={r.il*1e6:.0f}us"
+                             for b, r in zip(BATCHES, reps))
+            rows.append(csv_row(f"platform_ttft/{model}/{plat}",
+                                reps[0].il * 1e6, curve))
+            idle = ";".join(
+                f"b{b}=g{r.gpu_idle*1e6:.0f}/c{r.cpu_idle*1e6:.0f}"
+                for b, r in zip(BATCHES, reps))
+            rows.append(csv_row(f"platform_idle/{model}/{plat}",
+                                reps[0].gpu_idle * 1e6, idle))
+        # crossover: first batch where GH200 TTFT beats the best LC
+        cp = None
+        for i, b in enumerate(BATCHES):
+            lc = min(per_plat["Intel+H100"][i].il, per_plat["AMD+A100"][i].il)
+            if per_plat["GH200"][i].il < lc:
+                cp = b
+                break
+        b0 = 0
+        speedup64 = min(per_plat["Intel+H100"][-1].il,
+                        per_plat["AMD+A100"][-1].il) / \
+            per_plat["GH200"][-1].il
+        low_batch_penalty = per_plat["GH200"][b0].il / \
+            per_plat["Intel+H100"][b0].il
+        rows.append(csv_row(
+            f"platform_ttft/{model}/crossover", 0.0,
+            f"cp_batch={cp};gh200_speedup_b64={speedup64:.2f};"
+            f"gh200_lowbatch_penalty_b1={low_batch_penalty:.2f}"))
+    return rows

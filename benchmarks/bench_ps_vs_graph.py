@@ -1,0 +1,32 @@
+"""Fig. 9 reproduction: proximity-score fusion vs whole-graph capture for
+GPT-2 prefill — idealized (Eq. 8) AND measured (chain-jit actually runs),
+which the paper leaves as future work."""
+from __future__ import annotations
+
+from benchmarks.common import build_skip, csv_row
+
+LENGTHS = (8, 32, 128, 256)
+
+
+def run() -> list[str]:
+    skip = build_skip("gpt2")
+    rows = []
+    eager_host = None
+    for L in LENGTHS:
+        out = skip.fuse(length=L, repeats=2)
+        if eager_host is None:
+            eager_host = out.eager_host_s
+        rows.append(csv_row(
+            f"ps_vs_graph/gpt2/ps_L{L}", out.fused_host_s * 1e6,
+            f"k_fused={out.k_fused};ideal={out.ideal_speedup:.2f};"
+            f"measured={out.measured_speedup:.2f};err={out.max_abs_err:.1e}"))
+    # graph mode = single segment
+    from repro.core.tracing import Executor
+    n = len(skip.trace_.kernel_names)
+    ex = Executor(skip.trace_, segments=[list(range(n))])
+    ts = ex.measure_host(*skip.args, repeats=3)
+    graph_host = sum(ts)
+    rows.append(csv_row(
+        "ps_vs_graph/gpt2/graph", graph_host * 1e6,
+        f"k_fused=1;measured={eager_host / graph_host:.2f}"))
+    return rows

@@ -1,0 +1,101 @@
+"""Roofline table from the dry-run artifacts (beyond-paper deliverable).
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun), augments each
+cell with analytically-derived ideal terms (params/cache bytes from the
+config via eval_shape — no compilation here), and emits per-cell rows plus
+the EXPERIMENTS.md markdown table via `markdown_table()`.
+"""
+from __future__ import annotations
+
+import functools
+import glob
+import json
+import os
+
+import jax
+
+from benchmarks.common import csv_row
+from repro.configs import SHAPES, get_config
+from repro.launch.roofline import ideal_times
+from repro.launch.steps import batch_specs, encoder_len, params_sds
+from repro.models import make_cache
+
+
+@functools.lru_cache(maxsize=None)
+def _static_bytes(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    p = params_sds(cfg)
+    pbytes = sum(s.size * s.dtype.itemsize for s in jax.tree.leaves(p))
+    cbytes = 0
+    if shape.kind in ("prefill", "decode"):
+        el = encoder_len(cfg, shape)
+        c = jax.eval_shape(lambda: make_cache(
+            cfg, shape.global_batch, shape.seq_len, src_len=max(el, 1)))
+        cbytes = sum(s.size * s.dtype.itemsize for s in jax.tree.leaves(c))
+    b = batch_specs(cfg, shape)
+    iobytes = sum(s.size * s.dtype.itemsize for s in jax.tree.leaves(b))
+    return pbytes, cbytes, iobytes
+
+
+def load_cells(out_dir: str = "results/dryrun") -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            cells.append(r)
+            continue
+        shape = SHAPES[r["shape"]]
+        rf = r["roofline"]
+        pb, cb, iob = _static_bytes(r["arch"], r["shape"])
+        t_ci, t_mi = ideal_times(shape.kind, rf["model_flops_total"],
+                                 pb, cb, iob, rf["n_chips"])
+        step = max(rf["t_compute"], rf["t_memory"], rf["t_collective"])
+        rf["t_compute_ideal"] = t_ci
+        rf["t_memory_ideal"] = t_mi
+        rf["ideal_step"] = max(t_ci, t_mi)
+        rf["roofline_frac"] = rf["ideal_step"] / step if step else 0.0
+        r["params_bytes"] = pb
+        r["cache_bytes"] = cb
+        cells.append(r)
+    return cells
+
+
+def run() -> list[str]:
+    rows = []
+    for r in load_cells():
+        if r.get("status") != "ok":
+            rows.append(csv_row(
+                f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+                "status=failed"))
+            continue
+        rf = r["roofline"]
+        rows.append(csv_row(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            max(rf["t_compute"], rf["t_memory"], rf["t_collective"]) * 1e6,
+            f"dom={rf['dominant']};tC_ms={rf['t_compute']*1e3:.2f};"
+            f"tM_ms={rf['t_memory']*1e3:.2f};"
+            f"tX_ms={rf['t_collective']*1e3:.2f};"
+            f"useful={rf['useful_flops_frac']:.2f};"
+            f"roofline_frac={rf['roofline_frac']:.3f}"))
+    return rows
+
+
+def markdown_table(out_dir: str = "results/dryrun",
+                   mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | tC (ms) | tM (ms) | tX (ms) | dominant | "
+        "useful FLOPs | roofline frac | temp GB/dev |",
+        "|---|---|---:|---:|---:|---|---:|---:|---:|",
+    ]
+    for r in load_cells(out_dir):
+        if r.get("status") != "ok" or r["mesh"] != mesh:
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['t_compute']*1e3:.1f} | "
+            f"{rf['t_memory']*1e3:.1f} | {rf['t_collective']*1e3:.1f} | "
+            f"{rf['dominant']} | {rf['useful_flops_frac']:.2f} | "
+            f"{rf['roofline_frac']:.3f} | "
+            f"{r['memory']['temp_bytes']/1e9:.1f} |")
+    return "\n".join(lines)

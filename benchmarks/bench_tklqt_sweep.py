@@ -1,0 +1,35 @@
+"""Fig. 6 reproduction: TKLQT vs batch size for the encoder workloads on the
+three platforms, with the CPU->GPU-bound inflection (star markers)."""
+from __future__ import annotations
+
+from benchmarks.common import build_skip, csv_row
+
+BATCHES = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
+MODELS = ("bert-base-uncased", "xlm-roberta-base")
+PLATS = ("Intel+H100", "AMD+A100", "GH200")
+
+
+def run() -> list[str]:
+    rows = []
+    for model in MODELS:
+        skip = build_skip(model)
+        for plat in PLATS:
+            sweep, reps = skip.batch_sweep(plat, batches=BATCHES, use_host_scale=False)
+            curve = ";".join(f"b{b}={t*1e6:.0f}us"
+                             for b, t in zip(BATCHES, sweep.tklqt))
+            rows.append(csv_row(
+                f"tklqt_sweep/{model}/{plat}",
+                reps[0].tklqt * 1e6,
+                f"inflection_batch={sweep.inflection_batch};{curve}"))
+    # the paper's headline: GH200 stays CPU-bound to larger batch than LC
+    for model in MODELS:
+        skip = build_skip(model)
+        inf = {p: skip.batch_sweep(p, batches=BATCHES, use_host_scale=False)[0].inflection_batch
+               for p in PLATS}
+        ratio = (inf["GH200"] or BATCHES[-1]) / max(
+            inf["Intel+H100"] or 1, 1)
+        rows.append(csv_row(
+            f"tklqt_sweep/{model}/cc_vs_lc_inflection_ratio", 0.0,
+            f"gh200_x_larger={ratio:.1f};"
+            + ";".join(f"{p}={v}" for p, v in inf.items())))
+    return rows

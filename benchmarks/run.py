@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only nullkernel,tklqt_sweep]
+
+Prints ``name,us_per_call,derived`` CSV rows.  BENCH_FAST=1 trims depth.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("nullkernel", "benchmarks.bench_nullkernel"),        # Table V
+    ("exec_modes", "benchmarks.bench_exec_modes"),        # Table I
+    ("fusion_ttft", "benchmarks.bench_fusion_ttft"),      # Fig 3
+    ("tklqt_sweep", "benchmarks.bench_tklqt_sweep"),      # Fig 6
+    ("chain_candidates", "benchmarks.bench_chain_candidates"),  # Fig 7
+    ("ideal_speedup", "benchmarks.bench_ideal_speedup"),  # Fig 8
+    ("ps_vs_graph", "benchmarks.bench_ps_vs_graph"),      # Fig 9
+    ("platform_sweep", "benchmarks.bench_platform_sweep"),  # Figs 10/11
+    ("roofline", "benchmarks.bench_roofline"),            # beyond paper
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, module in BENCHES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(module)
+            for row in mod.run():
+                print(row, flush=True)
+            print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+            print(f"# {name} FAILED: {e!r}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Reproduce the paper's platform characterization on one model: TTFT vs
+batch on LC (PCIe A100/H100) and CC (GH200) platform models, crossover
+point, and the fusion opportunity in the CPU-bound region.
+
+    PYTHONPATH=src python examples/platform_characterization.py
+"""
+import jax
+
+from repro.configs import get_config
+from repro.core import SKIP
+from repro.models import forward, init_params
+
+# full-width 4-layer GPT-2 trunk at the paper's 512-token sequence
+cfg = get_config("gpt2").replace(n_layers=4, param_dtype="float32",
+                                 compute_dtype="float32")
+params = init_params(jax.random.PRNGKey(0), cfg)
+tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 512), 0,
+                            cfg.vocab_size)
+skip = SKIP.trace(lambda p, t: forward(p, t, cfg, unroll=True)[0],
+                  params, tokens)
+
+BATCHES = (1, 4, 16, 64, 256)
+print(f"{'batch':>6} | " + " | ".join(f"{p:>12}" for p in
+                                      ("Intel+H100", "AMD+A100", "GH200")))
+rows = {}
+for plat in ("Intel+H100", "AMD+A100", "GH200"):
+    rows[plat] = [skip.report(plat, b, use_host_scale=False).il
+                  for b in BATCHES]
+for i, b in enumerate(BATCHES):
+    print(f"{b:>6} | " + " | ".join(f"{rows[p][i]*1e3:10.2f}ms"
+                                    for p in rows))
+
+cp = next((b for i, b in enumerate(BATCHES)
+           if rows["GH200"][i] < min(rows["Intel+H100"][i],
+                                     rows["AMD+A100"][i])), None)
+print(f"\ncrossover (GH200 beats LC): batch {cp}")
+print(f"GH200 low-batch penalty (b=1): "
+      f"{rows['GH200'][0]/rows['Intel+H100'][0]:.2f}x")
+print(f"GH200 speedup at b=256: "
+      f"{min(rows['Intel+H100'][-1], rows['AMD+A100'][-1])/rows['GH200'][-1]:.2f}x")
+
+rec = skip.recommend(length=32)
+print(f"\nfusion opportunity (CPU-bound region): L=32 ideal speedup "
+      f"{rec.speedup:.2f}x from {rec.c_fused} deterministic chains")

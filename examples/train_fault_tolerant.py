@@ -1,0 +1,30 @@
+"""Fault-tolerant training: checkpoint, simulated crash, exact resume.
+
+    PYTHONPATH=src python examples/train_fault_tolerant.py
+"""
+import shutil
+
+from repro.configs import get_config, reduced
+from repro.data.pipeline import DataConfig
+from repro.training.loop import TrainConfig, Trainer
+
+CKPT = "/tmp/repro_example_ckpt"
+shutil.rmtree(CKPT, ignore_errors=True)
+
+cfg = reduced(get_config("smollm-360m"))
+data = DataConfig(batch=4, seq_len=64, vocab_size=cfg.vocab_size)
+
+# run 1: crashes (simulated node failure) right after the step-20 checkpoint
+try:
+    Trainer(cfg, data, TrainConfig(steps=40, ckpt_every=10, ckpt_dir=CKPT,
+                                   fail_at_step=20)).run()
+except RuntimeError as e:
+    print(f"crashed as planned: {e}")
+
+# run 2: auto-resumes from step 20 and completes
+out = Trainer(cfg, data, TrainConfig(steps=40, ckpt_every=10,
+                                     ckpt_dir=CKPT)).run()
+h = out["history"]
+print(f"resumed at step {h[0]['step']}, finished at {out['final_step']}; "
+      f"loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f}")
+print(f"stragglers flagged: {out['stragglers']}")

@@ -1,0 +1,40 @@
+"""Architecture registry — importing this package registers all configs."""
+from repro.configs.base import (  # noqa: F401
+    SHAPES, MambaConfig, ModelConfig, MoEConfig, ShapeSpec,
+    applicable_shapes, get_config, list_configs, reduced, register,
+)
+
+# assigned architectures
+from repro.configs import internlm2_20b      # noqa: F401
+from repro.configs import codeqwen15_7b      # noqa: F401
+from repro.configs import smollm_360m        # noqa: F401
+from repro.configs import gemma2_27b         # noqa: F401
+from repro.configs import moonshot_v1_16b_a3b  # noqa: F401
+from repro.configs import kimi_k2_1t_a32b    # noqa: F401
+from repro.configs import seamless_m4t_medium  # noqa: F401
+from repro.configs import rwkv6_3b           # noqa: F401
+from repro.configs import jamba_15_large_398b  # noqa: F401
+from repro.configs import llama32_vision_11b  # noqa: F401
+
+# the paper's own workloads (Table III)
+from repro.configs import paper_workloads    # noqa: F401
+
+ASSIGNED = (
+    "internlm2-20b",
+    "codeqwen1.5-7b",
+    "smollm-360m",
+    "gemma2-27b",
+    "moonshot-v1-16b-a3b",
+    "kimi-k2-1t-a32b",
+    "seamless-m4t-medium",
+    "rwkv6-3b",
+    "jamba-1.5-large-398b",
+    "llama-3.2-vision-11b",
+)
+
+PAPER_WORKLOADS = (
+    "bert-base-uncased",
+    "xlm-roberta-base",
+    "gpt2",
+    "llama-3.2-1b",
+)

@@ -1,0 +1,183 @@
+"""Model / run configuration dataclasses and the architecture registry.
+
+Every assigned architecture registers a ``ModelConfig`` here (one module per
+arch under ``repro/configs``).  Configs are plain frozen dataclasses so they
+hash and can be closed over by jit without retracing surprises.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                 # per-expert FFN hidden dim
+    n_shared_experts: int = 0     # DeepSeek/Moonlight-style always-on experts
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+    # EP dispatch: number of token chunks to scan over (bounds dispatch buffer)
+    dispatch_chunks: int = 1
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model/16)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    # --- block pattern -----------------------------------------------------
+    # The layer stack is a scan over "superblocks"; each superblock applies
+    # `block_pattern` in order.  n_layers must be divisible by len(pattern).
+    # Entries: "attn" | "attn_local" | "xattn" | "mamba" | "rwkv6"
+    block_pattern: Tuple[str, ...] = ("attn",)
+    # Which pattern slots use MoE MLP instead of dense (indices into pattern).
+    moe_slots: Tuple[int, ...] = ()
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    # --- attention details --------------------------------------------------
+    rope_theta: float = 10000.0
+    sliding_window: int = 0       # for "attn_local" entries
+    attn_softcap: float = 0.0     # gemma2: 50.0
+    final_softcap: float = 0.0    # gemma2: 30.0
+    qkv_bias: bool = False        # qwen-style
+    attn_scale: float = 0.0       # 0 -> 1/sqrt(head_dim)
+    # --- misc ----------------------------------------------------------------
+    tie_embeddings: bool = False
+    embed_scale: bool = False     # gemma: scale embeddings by sqrt(d_model)
+    norm_eps: float = 1e-5
+    act: str = "silu"             # silu (swiglu) | gelu (plain mlp, enc-only era)
+    glu: bool = True              # gated mlp
+    # --- encoder-decoder ------------------------------------------------------
+    n_encoder_layers: int = 0     # >0 => enc-dec; n_layers is the decoder depth
+    # --- multimodal stubs ------------------------------------------------------
+    frontend: str = "none"        # none | audio_frames | vision_patches
+    n_frontend_tokens: int = 0    # patches/frames emitted by the stub frontend
+    # --- dtypes ---------------------------------------------------------------
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    # --- sub-quadratic? (controls long_500k applicability) -------------------
+    subquadratic: bool = False
+
+    # ------------------------------------------------------------------ helpers
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def n_superblocks(self) -> int:
+        assert self.n_layers % len(self.block_pattern) == 0, (
+            f"{self.name}: n_layers={self.n_layers} not divisible by "
+            f"pattern len {len(self.block_pattern)}")
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One benchmark cell: an input-shape configuration."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# registry
+_REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    import repro.configs  # noqa: F401  (triggers registration side effects)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> list[str]:
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+def applicable_shapes(cfg: ModelConfig) -> list[str]:
+    """Which benchmark shapes apply to an arch (long_500k only if sub-quadratic)."""
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and not cfg.subquadratic:
+            continue
+        out.append(s.name)
+    return out
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    pat = cfg.block_pattern
+    kw = dict(
+        n_layers=len(pat) * 2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2 if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=503,           # prime-ish: catches padding assumptions
+        param_dtype="float32",
+        compute_dtype="float32",
+    )
+    if cfg.moe is not None:
+        # capacity_factor 4.0: tiny-test token counts make Switch-style
+        # dropping path-dependent; a generous capacity keeps tests exact.
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=4, top_k=min(cfg.moe.top_k, 2), d_expert=64,
+            n_shared_experts=min(cfg.moe.n_shared_experts, 1),
+            capacity_factor=4.0)
+    if cfg.mamba is not None:
+        kw["mamba"] = dataclasses.replace(cfg.mamba, d_state=8, d_conv=4)
+    if cfg.n_encoder_layers:
+        kw["n_encoder_layers"] = 2
+    if cfg.n_frontend_tokens:
+        kw["n_frontend_tokens"] = 8
+    if cfg.sliding_window:
+        kw["sliding_window"] = 8
+    kw.update(overrides)
+    return cfg.replace(**kw)

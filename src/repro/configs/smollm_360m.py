@@ -1,0 +1,19 @@
+"""SmolLM-360M — llama-arch small dense GQA [hf:HuggingFaceTB/SmolLM-360M].
+
+15 query heads / 5 kv heads: NOT divisible by the 16-way model axis — the
+sharding rules engine falls back to replicating the head axis and shards
+d_ff / vocab instead (see repro/distributed/sharding.py).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="smollm-360m",
+    family="dense",
+    n_layers=32,
+    d_model=960,
+    n_heads=15,
+    n_kv_heads=5,
+    d_ff=2560,
+    vocab_size=49152,
+    tie_embeddings=True,
+))

@@ -1,0 +1,8 @@
+"""The paper's primary contribution: SKIP-JAX profiler, TKLQT metrics,
+PU-boundedness classification, proximity-score fusion mining + chain-jit."""
+from repro.core.skip import SKIP                       # noqa: F401
+from repro.core.device_model import PLATFORMS          # noqa: F401
+from repro.core.proximity import mine_chains, sweep_lengths  # noqa: F401
+from repro.core.fusion import apply_fusion             # noqa: F401
+from repro.core.boundedness import classify_sweep, find_inflection  # noqa: F401
+from repro.core.tracing import Executor, trace_fn      # noqa: F401

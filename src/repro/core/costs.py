@@ -1,0 +1,47 @@
+"""Per-primitive FLOP/byte cost model for traced kernels.
+
+Used by the device model to derive modeled kernel durations on each
+platform (per-kernel roofline: max(flops/peak, bytes/bw) + fixed overhead).
+"""
+from __future__ import annotations
+
+import math
+
+
+def _numel(aval) -> int:
+    return math.prod(aval.shape) if aval.shape else 1
+
+
+def _bytes(aval) -> int:
+    return _numel(aval) * aval.dtype.itemsize
+
+
+def eqn_costs(eqn) -> tuple[float, float]:
+    """Returns (flops, bytes) for one jaxpr eqn."""
+    prim = eqn.primitive.name
+    in_avals = [v.aval for v in eqn.invars if hasattr(v, "aval")]
+    out_avals = [v.aval for v in eqn.outvars if hasattr(v, "aval")]
+    in_b = sum(_bytes(a) for a in in_avals if hasattr(a, "shape"))
+    out_b = sum(_bytes(a) for a in out_avals if hasattr(a, "shape"))
+    bts = in_b + out_b
+
+    if prim == "dot_general":
+        dn = eqn.params["dimension_numbers"]
+        (lc, rc), (lb, rb) = dn
+        lhs = in_avals[0]
+        out_elems = sum(_numel(a) for a in out_avals)
+        k = math.prod(lhs.shape[d] for d in lc) or 1
+        return 2.0 * out_elems * k, bts
+    if prim in ("conv_general_dilated",):
+        # rough: out_elems * 2 * prod(kernel spatial) * in_channels
+        out_elems = sum(_numel(a) for a in out_avals)
+        rhs = in_avals[1]
+        return 2.0 * out_elems * _numel(rhs) / max(rhs.shape[-1], 1), bts
+    if prim in ("exp", "tanh", "log", "logistic", "erf", "rsqrt", "sqrt",
+                "sin", "cos", "pow", "cumsum", "cumlogsumexp"):
+        return 4.0 * sum(_numel(a) for a in out_avals), bts
+    if prim.startswith("reduce_") or prim in ("argmax", "argmin", "sort",
+                                              "top_k"):
+        return float(sum(_numel(a) for a in in_avals)), bts
+    # elementwise / data movement default
+    return float(sum(_numel(a) for a in out_avals)), bts

@@ -1,0 +1,44 @@
+"""Chrome-trace (chrome://tracing / Perfetto) export of simulated SKIP
+timelines — host lane (launch calls) + device lane (kernel execution),
+so the CPU-bound launch trains and GPU-bound queue pileups of the paper's
+Fig. 4 are visually inspectable.
+"""
+from __future__ import annotations
+
+import json
+from typing import Sequence
+
+from repro.core.device_model import KernelEvent
+
+
+def to_chrome_trace(events: Sequence[KernelEvent], platform: str) -> dict:
+    out = []
+    for i, e in enumerate(events):
+        out.append({
+            "name": e.name, "ph": "X", "pid": 0, "tid": 0,
+            "ts": e.launch_begin * 1e6,
+            "dur": max(e.t_launch * 1e6, 0.01),
+            "cat": "host_launch",
+        })
+        out.append({
+            "name": e.name, "ph": "X", "pid": 0, "tid": 1,
+            "ts": e.kernel_start * 1e6,
+            "dur": max(e.duration * 1e6, 0.01),
+            "cat": "kernel",
+            "args": {"t_l_us": e.t_l * 1e6, "queue_us": e.t_queue * 1e6},
+        })
+    return {
+        "traceEvents": out,
+        "displayTimeUnit": "ms",
+        "metadata": {"platform": platform},
+        "otherData": {
+            "thread_names": {"0": "CPU (launch calls)",
+                             "1": f"{platform} stream 0"},
+        },
+    }
+
+
+def save_chrome_trace(events, platform: str, path: str) -> str:
+    with open(path, "w") as f:
+        json.dump(to_chrome_trace(events, platform), f)
+    return path

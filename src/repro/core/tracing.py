@@ -1,0 +1,294 @@
+"""SKIP-JAX tracing: jaxpr flattening, eager eqn-by-eqn execution with
+measured host dispatch, and segment ("chain-jit") compilation.
+
+The operator->kernel mapping of the paper translates as:
+
+  ATen operator stream      -> flattened jaxpr equation sequence
+  cudaLaunchKernel          -> dispatch of one per-eqn XLA executable
+  CUDA-graph / torch.compile-> whole-jaxpr jit (one dispatch)
+  fused chains (this work)  -> per-segment jit (one dispatch per chain)
+
+The dependency graph is exact (jaxpr vars), unlike the paper's
+timestamp-reconstructed graphs.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.extend.core as jexc
+
+from repro.core.costs import eqn_costs
+
+# primitives whose sub-jaxprs we inline ("operators" containing child ops)
+_INLINE_PRIMS = {"pjit", "jit", "closed_call", "custom_jvp_call",
+                 "custom_vjp_call", "remat", "checkpoint", "custom_vjp_call_jaxpr"}
+
+
+def _sub_jaxpr(eqn):
+    p = eqn.params
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        if key in p:
+            j = p[key]
+            return j
+    return None
+
+
+@dataclass
+class Kernel:
+    """One leaf equation = one eager-mode kernel launch."""
+    index: int
+    name: str                       # primitive name
+    eqn: object
+    flops: float
+    bytes: float
+    out_shapes: tuple
+    host_dispatch_s: float = 0.0    # measured on this host
+    operator: str = ""              # enclosing top-level operator name
+
+
+@dataclass
+class Trace:
+    jaxpr: object                   # flattened ClosedJaxpr-like (eqns list)
+    consts: list
+    in_vars: list
+    out_vars: list
+    kernels: list                   # list[Kernel], one per eqn
+    example_args: tuple
+
+    @property
+    def kernel_names(self) -> list[str]:
+        return [k.name for k in self.kernels]
+
+    def total_flops(self) -> float:
+        return sum(k.flops for k in self.kernels)
+
+
+def _flatten(jaxpr, env_map, eqns_out, depth=0):
+    """Inline nested call-like primitives; collect leaf eqns."""
+    for eqn in jaxpr.eqns:
+        sub = _sub_jaxpr(eqn) if eqn.primitive.name in _INLINE_PRIMS else None
+        if sub is not None:
+            inner = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+            # map inner invars to outer values(vars), inline constvars
+            sub_map = {}
+            consts = list(getattr(sub, "consts", ()) or ())
+            for cv, cval in zip(inner.constvars, consts):
+                sub_map[cv] = ("const", cval)
+            for iv, ov in zip(inner.invars, eqn.invars):
+                sub_map[iv] = ("var", env_map.get(ov, ov) if not isinstance(
+                    ov, jexc.Literal) else ov)
+            # recurse with substitution: rewrite inner eqns' vars
+            _flatten_inner(inner, sub_map, env_map, eqns_out)
+            for ov_inner, ov_outer in zip(inner.outvars, eqn.outvars):
+                tgt = sub_map.get(ov_inner, ov_inner)
+                env_map[ov_outer] = tgt if not isinstance(
+                    ov_inner, jexc.Literal) else ("lit", ov_inner)
+        else:
+            new_invars = []
+            for v in eqn.invars:
+                if isinstance(v, jexc.Literal):
+                    new_invars.append(v)
+                else:
+                    r = env_map.get(v, v)
+                    new_invars.append(r)
+            eqns_out.append((eqn, new_invars))
+
+
+def _flatten_inner(inner, sub_map, env_map, eqns_out):
+    """Flatten an inlined sub-jaxpr, rewriting through sub_map."""
+    for eqn in inner.eqns:
+        sub = _sub_jaxpr(eqn) if eqn.primitive.name in _INLINE_PRIMS else None
+        if sub is not None:
+            inner2 = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+            sub_map2 = {}
+            consts = list(getattr(sub, "consts", ()) or ())
+            for cv, cval in zip(inner2.constvars, consts):
+                sub_map2[cv] = ("const", cval)
+            for iv, ov in zip(inner2.invars, eqn.invars):
+                sub_map2[iv] = _resolve(ov, sub_map)
+            _flatten_inner(inner2, sub_map2, env_map, eqns_out)
+            for ov_inner, ov_outer in zip(inner2.outvars, eqn.outvars):
+                sub_map[ov_outer] = _resolve(ov_inner, sub_map2)
+        else:
+            new_invars = [_resolve(v, sub_map) for v in eqn.invars]
+            eqns_out.append((eqn, new_invars))
+            for ov in eqn.outvars:
+                sub_map[ov] = ov  # identity
+
+
+def _resolve(v, sub_map):
+    if isinstance(v, jexc.Literal):
+        return v
+    r = sub_map.get(v, v)
+    return r
+
+
+def _read(env, v):
+    if isinstance(v, jexc.Literal):
+        return v.val
+    if isinstance(v, tuple):
+        kind, val = v
+        if kind == "const":
+            return val
+        return _read(env, val)
+    return env[v]
+
+
+def _is_drop(v) -> bool:
+    return type(v).__name__ == "DropVar"
+
+
+def trace_fn(fn: Callable, *example_args) -> Trace:
+    """Flatten fn into a leaf-primitive kernel trace with cost estimates."""
+    closed = jax.make_jaxpr(fn)(*example_args)
+    env_map: dict = {}
+    flat: list = []
+    _flatten(closed.jaxpr, env_map, flat)
+    kernels = []
+    for i, (eqn, _) in enumerate(flat):
+        fl, bt = eqn_costs(eqn)
+        shapes = tuple(getattr(v.aval, "shape", ()) for v in eqn.outvars)
+        kernels.append(Kernel(i, eqn.primitive.name, eqn, fl, bt, shapes))
+    return Trace(jaxpr=closed.jaxpr, consts=list(closed.consts),
+                 in_vars=list(closed.jaxpr.invars),
+                 out_vars=list(closed.jaxpr.outvars),
+                 kernels=kernels, example_args=example_args,
+                 )._with_flat(flat, env_map, closed)
+
+
+# attach flattened eqns without polluting the dataclass signature
+def _with_flat(self, flat, env_map, closed):
+    self._flat = flat
+    self._env_map = env_map
+    self._closed = closed
+    return self
+
+
+Trace._with_flat = _with_flat
+
+
+class Executor:
+    """Executes a trace in segments; each segment is one jitted executable
+    (= one 'kernel launch').  Eager mode: one segment per eqn."""
+
+    def __init__(self, trace: Trace, segments: Optional[list] = None):
+        self.trace = trace
+        flat = trace._flat
+        n = len(flat)
+        self.segments = segments or [[i] for i in range(n)]
+        self._compiled = None
+
+    def _build(self):
+        trace = self.trace
+        flat = trace._flat
+        closed = trace._closed
+        # global env keyed by Var; seed with consts + inputs
+        const_vars = list(closed.jaxpr.constvars)
+
+        seg_fns = []
+        for seg in self.segments:
+            eqns = [flat[i] for i in seg]
+
+            # free inputs of the segment: vars read before defined inside
+            defined = set()
+            free = []
+            for eqn, invars in eqns:
+                for v in invars:
+                    base = v
+                    while isinstance(base, tuple):
+                        if base[0] == "const":
+                            base = None
+                            break
+                        base = base[1]
+                    if base is None or isinstance(base, jexc.Literal):
+                        continue
+                    if base not in defined and base not in free:
+                        free.append(base)
+                for ov in eqn.outvars:
+                    if not _is_drop(ov):
+                        defined.add(ov)
+            outs = [ov for eqn, _ in eqns for ov in eqn.outvars
+                    if not _is_drop(ov)]
+
+            def seg_fn(vals, _eqns=eqns, _free=free):
+                env = dict(zip(_free, vals))
+
+                def read(v):
+                    if isinstance(v, jexc.Literal):
+                        return v.val
+                    if isinstance(v, tuple):
+                        if v[0] == "const":
+                            return v[1]
+                        return read(v[1])
+                    return env[v]
+
+                results = []
+                for eqn, invars in _eqns:
+                    invals = [read(v) for v in invars]
+                    out = eqn.primitive.bind(*invals, **eqn.params)
+                    if not eqn.primitive.multiple_results:
+                        out = [out]
+                    for ov, o in zip(eqn.outvars, out):
+                        if not _is_drop(ov):
+                            env[ov] = o
+                            results.append(o)
+                return results
+
+            seg_fns.append((jax.jit(seg_fn), free, outs))
+        self._compiled = seg_fns
+        return seg_fns
+
+    def run(self, *args, measure: bool = False):
+        """Execute all segments; returns (outputs, host_times per segment)."""
+        trace = self.trace
+        closed = trace._closed
+        segs = self._compiled or self._build()
+        env = {}
+        for cv, cval in zip(closed.jaxpr.constvars, closed.consts):
+            env[cv] = cval
+        flat_args = jax.tree.leaves(args)
+        for iv, val in zip(closed.jaxpr.invars, flat_args):
+            env[iv] = val
+
+        host_times = []
+        for jfn, free, outs in segs:
+            vals = [env[v] if not isinstance(v, tuple) else v[1]
+                    for v in free]
+            t0 = time.perf_counter()
+            res = jfn(vals)
+            t1 = time.perf_counter()
+            if measure:
+                jax.block_until_ready(res)
+            host_times.append(t1 - t0)
+            for v, o in zip(outs, res):
+                env[v] = o
+
+        def read_out(v):
+            if isinstance(v, jexc.Literal):
+                return v.val
+            r = trace._env_map.get(v, v)
+            return _read(env, r)
+
+        outputs = [read_out(v) for v in closed.jaxpr.outvars]
+        return outputs, host_times
+
+    def measure_host(self, *args, repeats: int = 3):
+        """Warm up (compile) then measure median per-segment dispatch time."""
+        self.run(*args)  # warmup/compile
+        all_times = []
+        for _ in range(repeats):
+            _, ts = self.run(*args, measure=False)
+            all_times.append(ts)
+        import statistics
+        med = [statistics.median(x) for x in zip(*all_times)]
+        if len(self.segments) == len(self.trace.kernels):
+            for k, t in zip(self.trace.kernels, med):
+                k.host_dispatch_s = t
+        return med
+
+    @property
+    def n_launches(self) -> int:
+        return len(self.segments)

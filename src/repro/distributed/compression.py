@@ -1,0 +1,77 @@
+"""Int8 gradient compression with error feedback, for data-parallel
+all-reduce (a distributed-optimization trick for bandwidth-bound meshes).
+
+Each leaf is quantized per-tensor to int8 against its local absmax, summed
+across the data axis in int32, then dequantized; the quantization error is
+fed back into the next step's gradients (error feedback keeps SGD-style
+convergence).  Wire volume drops ~4x vs f32 / ~2x vs bf16.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _quantize(x, err):
+    xf = x.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    new_err = xf - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def compressed_psum(grads, errors, axis: str):
+    """Per-leaf int8 all-reduce over `axis` with error feedback.
+
+    Call INSIDE shard_map.  Returns (mean grads f32, new error state).
+    """
+    n = jax.lax.axis_size(axis)
+
+    def one(g, e):
+        q, scale, new_e = _quantize(g, e)
+        # the wire carries int8 payloads + one f32 scale per shard; the
+        # scale-weighted sum happens locally after the gather
+        q_all = jax.lax.all_gather(q, axis)                  # (n, ...) int8
+        s_all = jax.lax.all_gather(scale, axis)              # (n,)
+        val = jnp.tensordot(s_all, q_all.astype(jnp.float32), axes=(0, 0))
+        return (val / n).astype(g.dtype), new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(errors)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in out]),
+            jax.tree.unflatten(tdef, [o[1] for o in out]))
+
+
+def init_error_state(grads_like):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def make_compressed_dp_grad(loss_fn, mesh, axis: str = "data"):
+    """Explicit-DP gradient step: batch sharded over `axis`, params
+    replicated, gradients mean-reduced through the int8 compressed psum.
+
+    Returns grad_step(params, errors, batch) -> (grads, new_errors, loss).
+    """
+
+    def shard_fn(params, errors, local_batch):
+        (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, local_batch)
+        g, new_e = compressed_psum(g, errors, axis)
+        loss = jax.lax.pmean(loss, axis)
+        return g, new_e, loss
+
+    def apply(params, errors, batch):
+        rep = lambda t: jax.tree.map(lambda _: P(), t)
+        bspec = jax.tree.map(lambda _: P(axis), batch)
+        return jax.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(rep(params), rep(errors), bspec),
+            out_specs=(rep(params), rep(errors), P()),
+            check_vma=False,
+        )(params, errors, batch)
+
+    return apply

@@ -1,0 +1,153 @@
+"""Continuous-batching serving engine (Orca/vLLM-style slot scheduler).
+
+A fixed pool of B slots shares one batched KV cache.  New requests prefill
+into a free slot (prompt lengths padded to power-of-two buckets to bound
+recompiles); every engine step decodes ALL active slots in one batched
+step with per-slot lengths; finished slots free immediately and are refilled
+from the queue — no head-of-line blocking on long generations.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import forward, make_cache
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new_tokens: int = 16
+    generated: list = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class EngineStats:
+    prefills: int = 0
+    decode_steps: int = 0
+    tokens_out: int = 0
+    slot_occupancy: list = field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 max_len: int = 256, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.B = max_batch
+        self.T = max_len
+        self.cache = make_cache(cfg, max_batch, max_len, src_len=1,
+                                dtype=cfg.cdtype)
+        self.lengths = np.zeros(max_batch, np.int32)
+        self.slots: list[Optional[Request]] = [None] * max_batch
+        self.stats = EngineStats()
+        self.greedy = greedy
+
+        @functools.partial(jax.jit, static_argnames=("plen",))
+        def prefill_one(params, cache, tokens, slot, plen):
+            # tokens: (1, plen_padded); writes slot's KV rows.  The slot's
+            # sub-cache is ZEROED first — recurrent states (rwkv/mamba) from
+            # a previous occupant must not leak into the new request.
+            sub = jax.tree.map(
+                lambda c: jnp.zeros_like(
+                    jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1)),
+                cache)
+            logits, _, sub2 = forward(params, tokens, cfg, cache=sub,
+                                      cache_index=jnp.zeros((), jnp.int32))
+            cache2 = jax.tree.map(
+                lambda c, s_: jax.lax.dynamic_update_slice_in_dim(
+                    c, s_.astype(c.dtype), slot, axis=1), cache, sub2)
+            return logits[:, plen - 1], cache2
+
+        @jax.jit
+        def decode_all(params, cache, tokens, lengths):
+            logits, _, cache2 = forward(params, tokens, cfg, cache=cache,
+                                        lengths=lengths)
+            return logits[:, 0], cache2
+
+        self._prefill = prefill_one
+        self._decode = decode_all
+
+    # ------------------------------------------------------------ internals
+    @staticmethod
+    def _bucket(n: int) -> int:
+        return max(8, 1 << (n - 1).bit_length())
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def _sample(self, logits_row) -> int:
+        return int(jnp.argmax(logits_row))
+
+    # ------------------------------------------------------------ api
+    def admit(self, req: Request) -> bool:
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        plen = len(req.prompt)
+        bucket = self._bucket(plen)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = req.prompt
+        logits, self.cache = self._prefill(
+            self.params, self.cache, jnp.asarray(toks), slot, plen)
+        first = self._sample(logits[0])
+        req.generated.append(first)
+        self.slots[slot] = req
+        self.lengths[slot] = plen
+        self.stats.prefills += 1
+        self.stats.tokens_out += 1
+        return True
+
+    def step(self):
+        """One decode step for all active slots."""
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return
+        toks = np.zeros((self.B, 1), np.int32)
+        for i in active:
+            toks[i, 0] = self.slots[i].generated[-1]
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(self.lengths))
+        self.stats.decode_steps += 1
+        self.stats.slot_occupancy.append(len(active))
+        logits_np = np.asarray(logits)
+        for i in active:
+            req = self.slots[i]
+            self.lengths[i] += 1
+            nxt = int(np.argmax(logits_np[i]))
+            req.generated.append(nxt)
+            self.stats.tokens_out += 1
+            if len(req.generated) >= req.max_new_tokens or \
+                    self.lengths[i] >= self.T - 1:
+                req.done = True
+                self.slots[i] = None
+                self.lengths[i] = 0
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Continuous batching: admit whenever a slot frees."""
+        pending = list(requests)
+        done: list[Request] = []
+        while pending or any(s is not None for s in self.slots):
+            while pending and self._free_slot() is not None:
+                if self.admit(pending[0]):
+                    pending.pop(0)
+                else:
+                    break
+            self.step()
+            for r in requests:
+                if r.done and r not in done:
+                    done.append(r)
+        return done

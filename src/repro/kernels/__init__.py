@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot-spots, each with a jitted wrapper
+(ops.py) and a pure-jnp oracle (ref.py), validated in interpret mode.
+
+flash_attention  — online-softmax VMEM tiles, GQA via K/V index_map,
+                   causal/sliding-window/softcap (the paper's
+                   domain-specific-fusion exemplar, TPU-native)
+decode_attention — flash-decoding over a long KV cache (memory-bound)
+rmsnorm          — fused residual+RMSNorm (a PS=1 chain, hand-fused)
+rwkv6            — chunked WKV6 with data-dependent decay (log-space,
+                   overflow-safe; MXU cumsum via triangular matmul)
+"""
+from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
+from repro.kernels.decode_attention.ops import decode_attention  # noqa: F401
+from repro.kernels.rmsnorm.ops import rmsnorm as fused_rmsnorm  # noqa: F401
+from repro.kernels.rwkv6.ops import wkv6  # noqa: F401

@@ -1,0 +1,83 @@
+"""Pallas TPU decode attention (flash-decoding style).
+
+One query token per sequence attends over a long KV cache.  Grid
+(B, HQ, nKV) with the KV dim innermost; online-softmax accumulators live in
+VMEM scratch.  This kernel is memory-bound by design — its job is streaming
+the KV cache through VMEM at full HBM bandwidth; the q row is re-packed to
+(8, hd) sublanes to keep the VPU busy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+
+
+def _dec_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                *, scale, block_kv, n_kv):
+    ikv = pl.program_id(2)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (1, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (bkv, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = ikv * block_kv + jax.lax.broadcasted_iota(jnp.int32, (1, block_kv), 1)
+    s = jnp.where(kpos < kvlen_ref[0], s, NEG_INF)         # (1, bkv)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ikv == n_kv - 1)
+    def _done():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k, v, kv_len, *, scale, block_kv=512,
+                            interpret=True):
+    """q: (B,HQ,1,hd); k/v: (B,HKV,T,hd); kv_len: (1,) int32."""
+    b, hq, _, hd = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = hq // hkv
+    nkv = t // block_kv
+    kernel = functools.partial(_dec_kernel, scale=scale, block_kv=block_kv,
+                               n_kv=nkv)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nkv),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, hd), lambda bb, h, ikv: (bb, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda bb, h, ikv: (bb, h // g, ikv, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda bb, h, ikv: (bb, h // g, ikv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd), lambda bb, h, ikv: (bb, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len, q, k, v)

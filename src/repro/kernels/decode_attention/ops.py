@@ -1,0 +1,37 @@
+"""Jitted wrapper for the decode-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_kv", "interpret"))
+def decode_attention(q, k, v, kv_len=None, *, scale: float, block_kv=512,
+                     interpret=True):
+    """q: (B,HQ,hd); k/v: (B,HKV,T,hd); kv_len scalar (None -> T)."""
+    b, hq, hd = q.shape
+    t = k.shape[2]
+    if kv_len is None:
+        kv_len = t
+    kv_len = jnp.asarray(kv_len, jnp.int32).reshape(1)
+
+    bkv = min(block_kv, max(8, 1 << (t - 1).bit_length()))
+    pad_t = (-t) % bkv
+    if pad_t:
+        widths = [(0, 0), (0, 0), (0, pad_t), (0, 0)]
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    pad_h = (-hd) % 128
+    if pad_h:
+        q = jnp.pad(q, [(0, 0), (0, 0), (0, pad_h)])
+        k = jnp.pad(k, [(0, 0), (0, 0), (0, 0), (0, pad_h)])
+        v = jnp.pad(v, [(0, 0), (0, 0), (0, 0), (0, pad_h)])
+
+    kv_len = jnp.minimum(kv_len, t)
+    o = decode_attention_kernel(q[:, :, None, :], k, v, kv_len, scale=scale,
+                                block_kv=bkv, interpret=interpret)
+    return o[:, :, 0, :hd]

@@ -1,0 +1,23 @@
+"""Oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def decode_attention_ref(q, k, v, kv_len, *, scale: float):
+    """q: (B,HQ,hd); k/v: (B,HKV,T,hd); kv_len: scalar — positions < kv_len
+    are valid.  Returns (B,HQ,hd)."""
+    b, hq, hd = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = hq // hkv
+    kf = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhd,bhtd->bht", q.astype(jnp.float32), kf) * scale
+    mask = jnp.arange(t)[None, None, :] < kv_len
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bht,bhtd->bhd", p, vf)
+    return o.astype(q.dtype)

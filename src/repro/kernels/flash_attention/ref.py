@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the flash-attention kernel (BHSD layout, GQA)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def attention_ref(q, k, v, *, scale: float, causal: bool = True,
+                  window: int = 0, softcap: float = 0.0,
+                  kv_len=None):
+    """q: (B,HQ,S,hd); k/v: (B,HKV,T,hd); kv_len: scalar valid-KV bound.
+
+    Dense reference with fp32 softmax — the oracle the Pallas kernel (and
+    the XLA flash path) must match.
+    """
+    b, hq, s, hd = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = hq // hkv
+    kf = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    sc = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32), kf) * scale
+    if softcap:
+        sc = softcap * jnp.tanh(sc / softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        # rows/cols aligned at the end: q token i sits at position T-S+i
+        mask &= (qpos + (t - s)) >= kpos
+    if window:
+        mask &= (qpos + (t - s) - kpos) < window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    sc = jnp.where(mask[None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhst,bhtd->bhsd", p, vf)
+    return o.astype(q.dtype)

@@ -1,0 +1,16 @@
+"""Oracle for the fused RMSNorm(+residual) kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, weight, residual=None, eps: float = 1e-5):
+    """x: (N, D); weight: (D,); optional residual added BEFORE the norm
+    (the fused residual+norm pattern at every block boundary)."""
+    if residual is not None:
+        x = x + residual
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return out.astype(x.dtype), x

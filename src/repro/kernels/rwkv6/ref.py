@@ -1,0 +1,30 @@
+"""Oracle for WKV6: the per-step recurrence, executed literally.
+
+    o_t = r_t @ (S_{t-1}) + (r_t . (u (.) k_t)) v_t
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t        with w_t = exp(logw_t)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def wkv6_ref(r, k, v, logw, u, s0):
+    """r,k,v,logw: (B,H,T,hd) f32; u: (H,hd); s0: (B,H,hd,hd).
+    Returns (o: (B,H,T,hd), sT)."""
+    r, k, v, logw = (np.asarray(x, np.float64) for x in (r, k, v, logw))
+    u = np.asarray(u, np.float64)
+    s = np.asarray(s0, np.float64).copy()
+    b, h, t, hd = r.shape
+    o = np.zeros((b, h, t, hd))
+    for bi in range(b):
+        for hi in range(h):
+            st = s[bi, hi]
+            for ti in range(t):
+                rt, kt, vt = r[bi, hi, ti], k[bi, hi, ti], v[bi, hi, ti]
+                wt = np.exp(logw[bi, hi, ti])
+                bonus = (rt * u[hi] * kt).sum() * vt
+                o[bi, hi, ti] = rt @ st + bonus
+                st = wt[:, None] * st + np.outer(kt, vt)
+            s[bi, hi] = st
+    return jnp.asarray(o, jnp.float32), jnp.asarray(s, jnp.float32)

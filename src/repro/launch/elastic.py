@@ -1,0 +1,50 @@
+"""Elastic scaling controller: reshard a run across device-count changes.
+
+The checkpoint format stores full (unsharded) arrays, so restoring onto a
+DIFFERENT mesh is just `restore(..., shardings=specs_for(new_mesh))`.  This
+module demonstrates the controller loop: detect a changed device pool,
+rebuild the mesh, re-lower the step, restore state, continue.  The straggler
+watchdog (training/loop.py) feeds `plan_reshape` on real deployments.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import param_specs, shardings_for
+from repro.launch.mesh import make_host_mesh
+
+
+@dataclass
+class ElasticPlan:
+    old_devices: int
+    new_devices: int
+    mesh_shape: tuple
+
+
+def plan_reshape(n_devices: int, lost: int = 0) -> ElasticPlan:
+    """Largest (data, model) grid that fits the surviving device pool.
+    Prefers shrinking the data axis — model-sharded weights keep layout."""
+    avail = n_devices - lost
+    model = 1
+    for m in (16, 8, 4, 2, 1):
+        if avail % m == 0 and m <= avail:
+            model = m
+            break
+    return ElasticPlan(n_devices, avail, (avail // model, model))
+
+
+def elastic_restore(ckpt: CheckpointManager, step: int, target_tree,
+                    cfg: ModelConfig, mesh=None):
+    """Restore a checkpoint onto the CURRENT device pool."""
+    if mesh is None:
+        n = len(jax.devices())
+        plan = plan_reshape(n)
+        mesh = make_host_mesh(data=plan.mesh_shape[0],
+                              model=plan.mesh_shape[1])
+    specs = param_specs(target_tree, cfg, mesh)
+    sh = shardings_for(target_tree, specs, mesh)
+    return ckpt.restore(step, target_tree, shardings=sh), mesh

@@ -1,0 +1,512 @@
+"""Roofline-term extraction from compiled AOT artifacts.
+
+``compiled.cost_analysis()`` counts while-loop (lax.scan) bodies ONCE, which
+undercounts a scanned-layer transformer by ~n_layers.  This module parses the
+optimized HLO text instead: it builds the computation call graph, extracts
+scan trip counts from while-condition constants, and accumulates
+
+  * dot FLOPs (exact, from dot shapes x contracting dims),
+  * HBM byte traffic (operands + outputs of top-level instructions —
+    fusions already merge elementwise chains, so this approximates traffic),
+  * collective bytes per op kind, with ring-model wire-byte estimates.
+
+Raw ``cost_analysis()`` numbers are reported alongside for transparency.
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (3D-torus links counted per collective family).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+# --------------------------------------------------------------- hw constants
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+
+@dataclass
+class Instr:
+    name: str
+    out_types: list          # [(dtype, [dims]), ...]
+    opcode: str
+    operands: list           # operand names
+    raw: str
+
+    def out_bytes(self) -> int:
+        return sum(DTYPE_BYTES.get(d, 4) * math.prod(dims or [1])
+                   for d, dims in self.out_types)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: dict = field(default_factory=dict)   # name -> Instr
+    order: list = field(default_factory=list)
+
+
+def _parse_shapes(type_str: str):
+    """'(f32[4,8]{1,0}, s32[])' or 'bf16[48,16]{...}' -> [(dtype, dims)]."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES and dt != "token":
+            continue
+        out.append((dt, [int(x) for x in dims.split(",")] if dims else []))
+    return out
+
+
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        if s.startswith(("HloModule",)):
+            continue
+        # computation header: "%name (args) -> type {"  or "ENTRY %name ..."
+        if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", s)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if s.startswith("ENTRY"):
+                    comps["__entry__"] = cur
+            continue
+        if s.startswith("}"):
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(s)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        # split "type opcode(operands), attrs"
+        opm = re.match(r"((?:\([^)]*\))|(?:[\w\[\]{},: ]+?))\s+([\w\-]+)\(", rest)
+        if not opm:
+            continue
+        type_str, opcode = opm.group(1), opm.group(2)
+        paren = rest[opm.end() - 1:]
+        # operand segment = first balanced parens
+        depth, end = 0, 0
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        opstr = paren[1:end]
+        attrs = paren[end + 1:]
+        operands = _OPERAND_RE.findall(opstr)
+        instr = Instr(name, _parse_shapes(type_str), opcode, operands,
+                      opstr + "|" + attrs)
+        cur.instrs[name] = instr
+        cur.order.append(name)
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Scan conditions compare the induction var against a constant bound
+    (jax lowers lax.scan to `while i < N`); take the max positive integer
+    constant in the condition computation."""
+    consts = []
+    for ins in cond.instrs.values():
+        if ins.opcode == "constant":
+            m = re.match(r"\s*(-?\d+)\s*(?:[|)].*)?$", ins.raw)
+            if m:
+                try:
+                    consts.append(int(m.group(1)))
+                except ValueError:
+                    pass
+    pos = [c for c in consts if c > 0]
+    return max(pos) if pos else 1
+
+
+def _group_size(attr: str, default: int) -> int:
+    # replica_groups={{0,1,2,...},{...}} or replica_groups=[8,32]<=[256] forms
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", attr)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attr)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0          # operand bytes (prompt definition)
+    wire_bytes: float = 0.0          # ring-model per-device wire traffic
+    coll_by_kind: dict = field(default_factory=lambda: defaultdict(float))
+    coll_count: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        self.wire_bytes += other.wire_bytes * mult
+        self.coll_count += int(other.coll_count * mult)
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] += v * mult
+
+
+_CALLS_RE = re.compile(r"(?:calls|body|condition|branch_computations)="
+                       r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+
+
+def _dus_update_bytes(comp: Computation, ins: Instr):
+    """dynamic-update-slice writes IN PLACE: traffic = the update slice,
+    not the whole buffer."""
+    if len(ins.operands) >= 2:
+        upd = comp.instrs.get(ins.operands[1])
+        if upd is not None:
+            return upd.out_bytes()
+    # operand shape unknown (e.g. fusion parameter) — parse from raw types
+    shapes = _parse_shapes(ins.raw)
+    if len(shapes) >= 2:
+        d, dims = shapes[1]
+        return DTYPE_BYTES.get(d, 4) * math.prod(dims or [1])
+    return ins.out_bytes()
+
+
+def _write_bytes(ins: Instr, comp: Computation, comps) -> float:
+    """HBM bytes written by one instruction (aliasing-aware)."""
+    if ins.opcode == "dynamic-update-slice":
+        return _dus_update_bytes(comp, ins)
+    if ins.opcode == "fusion" and "dynamic-update-slice" in ins.name:
+        # in-place DUS fusion: the called computation's root DUS determines
+        # the touched bytes
+        cm = _CALLS_RE.search(ins.raw)
+        if cm:
+            for item in re.split(r",\s*", cm.group(1)):
+                sub = comps.get(item.strip().lstrip("%"))
+                if sub is None:
+                    continue
+                for sins in sub.instrs.values():
+                    if sins.opcode == "dynamic-update-slice":
+                        return _dus_update_bytes(sub, sins)
+    return ins.out_bytes()
+
+
+def _bf16_factor(comp: Computation, ins: Instr) -> float:
+    """0.5 if this collective moves data that is a bf16<->f32 upcast:
+    either fed by a convert-from-bf16 (weight/activation gathers) or
+    consumed by a convert-to-bf16 (gradient reductions).  XLA:CPU upcasts
+    bf16 dots to f32; the TPU target communicates these at bf16."""
+    for o in ins.operands:
+        prod = comp.instrs.get(o)
+        if prod is None:
+            continue
+        if prod.opcode == "convert" and prod.operands:
+            src = comp.instrs.get(prod.operands[0])
+            if src is not None and src.out_types and \
+                    src.out_types[0][0] == "bf16":
+                return 0.5
+        if prod.opcode == "fusion" and "convert" in prod.name:
+            return 0.5
+    # consumer side: f32 collective immediately converted to bf16
+    if ins.out_types and ins.out_types[0][0] == "f32":
+        if not hasattr(comp, "_consumers"):
+            cons = {}
+            for other in comp.instrs.values():
+                for o in other.operands:
+                    cons.setdefault(o, []).append(other)
+            comp._consumers = cons
+        for user in comp._consumers.get(ins.name, []):
+            if user.opcode == "convert" and user.out_types and \
+                    user.out_types[0][0] == "bf16":
+                return 0.5
+            if user.opcode == "fusion" and "convert" in user.name:
+                return 0.5
+    return 1.0
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = math.prod(ins.out_types[0][1] or [1]) if ins.out_types else 0
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.raw)
+    if not m:
+        return 2.0 * out_elems  # degenerate
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    lhs = comp.instrs.get(ins.operands[0]) if ins.operands else None
+    if lhs is None or not lhs.out_types:
+        return 2.0 * out_elems
+    lshape = lhs.out_types[0][1]
+    k = math.prod(lshape[d] for d in cdims if d < len(lshape)) or 1
+    return 2.0 * out_elems * k
+
+
+_BYTE_OPS = {"dot", "fusion", "convert", "copy", "dynamic-update-slice",
+             "dynamic-slice", "gather", "scatter", "transpose", "reduce",
+             "broadcast", "concatenate", "pad", "reshape", "slice",
+             "convolution", "iota", "compare", "select", "add", "multiply",
+             "subtract", "divide", "exponential", "tanh", "rsqrt", "maximum",
+             "minimum", "reduce-window", "sort", "bitcast-convert"}
+
+
+def _comp_cost(comp: Computation, comps, memo, flops_only=False) -> Cost:
+    key = (comp.name, flops_only)
+    if key in memo:
+        return memo[key]
+    c = Cost()
+    memo[key] = c  # guards recursion (HLO is a DAG; overwritten below)
+    for nm in comp.order:
+        ins = comp.instrs[nm]
+        op = ins.opcode
+        if op == "dot" or op == "convolution":
+            c.flops += _dot_flops(ins, comp)
+        if op in COLLECTIVES and not flops_only:
+            # XLA:CPU upcasts bf16 dots to f32, so weight/activation gathers
+            # appear at f32 width; the TPU target keeps them bf16 — normalize.
+            f32fix = _bf16_factor(comp, ins)
+            opb = sum(comp.instrs[o].out_bytes() for o in ins.operands
+                      if o in comp.instrs) * f32fix
+            p = _group_size(ins.raw, 16)
+            c.coll_bytes += opb
+            c.coll_count += 1
+            c.coll_by_kind[op] += opb
+            if op == "all-gather":
+                wire = ins.out_bytes() * f32fix * (p - 1) / max(p, 1)
+            elif op == "all-reduce":
+                wire = 2 * opb * (p - 1) / max(p, 1)
+            elif op == "reduce-scatter":
+                wire = opb * (p - 1) / max(p, 1)
+            elif op == "all-to-all":
+                wire = opb * (p - 1) / max(p, 1)
+            else:  # collective-permute
+                wire = opb
+            c.wire_bytes += wire
+        if (op in _BYTE_OPS or op in COLLECTIVES) and not flops_only:
+            # count each materialized buffer once (its write); reads are the
+            # producers' writes — avoids operand double-counting
+            c.bytes += _write_bytes(ins, comp, comps)
+        if op == "while":
+            bm = re.search(r"body=%?([\w.\-]+)", ins.raw)
+            cm = re.search(r"condition=%?([\w.\-]+)", ins.raw)
+            if bm and bm.group(1) in comps:
+                trips = _trip_count(comps[cm.group(1)]) if cm and \
+                    cm.group(1) in comps else 1
+                c.add(_comp_cost(comps[bm.group(1)], comps, memo, flops_only),
+                      trips)
+        elif op in ("fusion", "map", "reduce", "reduce-window", "scatter",
+                    "sort"):
+            # fused bodies: internal values never touch HBM -> flops only
+            cm = _CALLS_RE.search(ins.raw)
+            if cm:
+                for sub in re.split(r",\s*", cm.group(1)):
+                    sub = sub.lstrip("%")
+                    if sub in comps:
+                        c.add(_comp_cost(comps[sub], comps, memo, True), 1.0)
+        elif op in ("call", "custom-call", "conditional", "async-start"):
+            cm = _CALLS_RE.search(ins.raw)
+            if cm:
+                for sub in re.split(r",\s*", cm.group(1)):
+                    sub = sub.lstrip("%")
+                    if sub in comps:
+                        c.add(_comp_cost(comps[sub], comps, memo, flops_only),
+                              1.0)
+    memo[key] = c
+    return c
+
+
+def top_costs(text: str, k: int = 20):
+    """Debug: top instructions by bytes*trips and flops*trips — the §Perf
+    hillclimb's 'profile'."""
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    # compute trip multiplier per computation by walking from entry
+    mult = {entry.name: 1.0}
+    order = [entry.name]
+    seen = {entry.name}
+    i = 0
+    while i < len(order):
+        comp = comps[order[i]]
+        m = mult[comp.name]
+        for ins in comp.instrs.values():
+            subs = []
+            trips = 1.0
+            if ins.opcode == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ins.raw)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.raw)
+                if bm:
+                    subs = [bm.group(1)]
+                    if cm and cm.group(1) in comps:
+                        trips = _trip_count(comps[cm.group(1)])
+            else:
+                cmm = _CALLS_RE.search(ins.raw)
+                if cmm and ins.opcode in ("fusion", "call", "conditional"):
+                    subs = [s.lstrip("%") for s in
+                            re.split(r",\s*", cmm.group(1))]
+            for s in subs:
+                if s in comps:
+                    mult[s] = max(mult.get(s, 0.0), m * trips)
+                    if s not in seen:
+                        seen.add(s)
+                        order.append(s)
+        i += 1
+    rows = []
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for ins in comp.instrs.values():
+            if ins.opcode in _BYTE_OPS or ins.opcode in COLLECTIVES:
+                rows.append((ins.out_bytes() * m, ins.out_bytes(), m,
+                             cname, ins.name, ins.opcode,
+                             ins.out_types[:1]))
+    rows.sort(reverse=True)
+    return rows[:k]
+
+
+def analyze_hlo(text: str) -> Cost:
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return Cost()
+    cost = _comp_cost(entry, comps, {})
+    # entry parameters are read from HBM once each (weights, caches, batch)
+    for ins in entry.instrs.values():
+        if ins.opcode == "parameter":
+            cost.bytes += ins.out_bytes()
+    return cost
+
+
+def ideal_times(kind: str, model_flops_total: float, params_bytes: float,
+                cache_bytes: float, io_bytes: float, n_chips: int):
+    """Lower-bound step times: compute term = useful model flops at peak;
+    memory term = unavoidable HBM traffic (params re-read per pass — 3x for
+    train fwd/bwd, 1x otherwise — plus KV cache and batch IO)."""
+    t_c = model_flops_total / n_chips / PEAK_FLOPS_BF16
+    passes = 3.0 if kind == "train" else 1.0
+    min_bytes = params_bytes * passes + cache_bytes + io_bytes
+    t_m = min_bytes / n_chips / HBM_BW
+    return t_c, t_m
+
+
+# --------------------------------------------------------------- roofline
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    wire_bytes: float
+    coll_count: int
+    coll_by_kind: dict
+    raw_cost_flops: float
+    raw_cost_bytes: float
+    model_flops_total: float          # 6*N*D (active) whole-step, all chips
+    n_chips: int
+
+    @property
+    def t_compute(self):
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self):
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def dominant(self):
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self):
+        # optimistic overlap model: terms hide behind the max
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_frac(self):
+        """MODEL_FLOPS / HLO_FLOPs (per-chip)."""
+        per_chip_model = self.model_flops_total / self.n_chips
+        return per_chip_model / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_frac(self):
+        """Fraction of the compute roofline achieved: useful model flops per
+        chip over (step_time * peak)."""
+        per_chip_model = self.model_flops_total / self.n_chips
+        denom = self.step_time * PEAK_FLOPS_BF16
+        return per_chip_model / denom if denom else 0.0
+
+    def to_dict(self):
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "wire_bytes": self.wire_bytes,
+            "coll_count": self.coll_count,
+            "coll_by_kind": dict(self.coll_by_kind),
+            "raw_cost_flops": self.raw_cost_flops,
+            "raw_cost_bytes": self.raw_cost_bytes,
+            "model_flops_total": self.model_flops_total,
+            "n_chips": self.n_chips,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "dominant": self.dominant,
+            "step_time": self.step_time,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+        }
+
+
+def model_flops(cfg, shape, n_active_params: int, n_embed_params: int) -> float:
+    """6*N*D convention.  N = active non-embedding params + embedding matmul
+    (unembed) treated as params once; D = tokens processed in the step."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 3  # fwd + bwd(2x)
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 1
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        mult = 1
+    n = n_active_params + n_embed_params
+    return 2.0 * n * tokens * mult  # 2*N*D per fwd; x3 for train = 6*N*D
+
+
+def build_roofline(compiled, cfg, shape, mesh, *, model_flops_total: float,
+                   hlo_text: str | None = None) -> Roofline:
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    cost = analyze_hlo(text)
+    try:
+        raw = compiled.cost_analysis()
+        raw_f = float(raw.get("flops", 0.0))
+        raw_b = float(raw.get("bytes accessed", 0.0))
+    except Exception:
+        raw_f = raw_b = 0.0
+    n_chips = math.prod(mesh.shape.values())
+    return Roofline(
+        flops=cost.flops, hbm_bytes=cost.bytes, coll_bytes=cost.coll_bytes,
+        wire_bytes=cost.wire_bytes, coll_count=cost.coll_count,
+        coll_by_kind=dict(cost.coll_by_kind),
+        raw_cost_flops=raw_f, raw_cost_bytes=raw_b,
+        model_flops_total=model_flops_total, n_chips=n_chips)

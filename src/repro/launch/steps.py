@@ -1,0 +1,377 @@
+"""Step builders: jitted, sharded train/prefill/decode steps + input specs.
+
+``build_step(cfg, shape, mesh, ...)`` returns a ``StepBundle`` whose
+``lower()`` produces the AOT artifact used by both the dry-run and the
+roofline analysis.  No device memory is ever allocated for the full-size
+configs — everything flows through ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import (
+    cache_specs, make_shd, param_specs, shardings_for, valid_spec)
+from repro.launch.mesh import dp_axes_of, tp_axis_of
+from repro.layers.moe import MeshContext
+from repro.models import forward, init_params, loss_fn, make_cache
+from repro.training.optim import OptConfig, opt_init, opt_update
+
+
+def encoder_len(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """Source-sequence length for enc-dec / VLM stubs."""
+    if cfg.n_encoder_layers or cfg.frontend != "none":
+        return cfg.n_frontend_tokens
+    return 0
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """ShapeDtypeStructs for one global batch of this shape cell."""
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+           "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    el = encoder_len(cfg, shape)
+    if cfg.n_encoder_layers:
+        out["encoder_tokens"] = jax.ShapeDtypeStruct((b, el, cfg.d_model),
+                                                     cfg.cdtype)
+    elif cfg.frontend == "vision_patches":
+        out["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (b, el, cfg.d_model), cfg.cdtype)
+    return out
+
+
+def batch_pspecs(batch, mesh: Mesh):
+    dp = dp_axes_of(mesh)
+    return jax.tree.map(
+        lambda x: valid_spec(x.shape, P(dp, *((None,) * (x.ndim - 1))), mesh),
+        batch)
+
+
+@dataclass(frozen=True)
+class StepOptions:
+    """Perf/memory levers — the §Perf hillclimb iterates these."""
+    microbatches: int = 0          # 0 = auto (fit activation budget)
+    seq_shard: bool = True         # Megatron-style sequence-parallel residuals
+    remat_policy: str = "nothing"  # nothing | dots | dots_no_batch
+    loss_chunks: int = 0           # 0 = auto (vocab-dependent)
+    zero1: bool = True             # shard optimizer state over data axis
+    donate: bool = True
+    act_budget_bytes: float = 4e9  # per-device activation target for auto-µb
+
+
+def default_options(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                    base: Optional[StepOptions] = None) -> StepOptions:
+    """Napkin-math defaults: pick microbatches so remat-saved layer
+    boundaries (B_loc x S_loc x D x 2B x n_layers) fit the budget."""
+    import dataclasses as _dc
+    opt = base or StepOptions()
+    dp = 1
+    for a in dp_axes_of(mesh):
+        dp *= mesh.shape[a]
+    tp = mesh.shape["model"]
+    if shape.kind != "train":
+        return _dc.replace(opt, microbatches=1,
+                           loss_chunks=opt.loss_chunks or 1)
+    b_loc = max(shape.global_batch // dp, 1)
+    s_loc = shape.seq_len // tp if (opt.seq_shard and
+                                    shape.seq_len % tp == 0) else shape.seq_len
+    per_layer = b_loc * s_loc * cfg.d_model * 2
+    total = per_layer * cfg.n_layers
+    mb = opt.microbatches
+    if mb == 0:
+        mb = 1
+        while total / mb > opt.act_budget_bytes and mb < b_loc:
+            mb *= 2
+        mb = min(mb, b_loc)
+    lc = opt.loss_chunks
+    if lc == 0:
+        lc = 8 if cfg.vocab_size >= 100_000 else 1
+        while shape.seq_len % max(lc, 1):
+            lc //= 2
+        lc = max(lc, 1)
+    return _dc.replace(opt, microbatches=mb, loss_chunks=lc)
+
+
+@dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    jitted: Any
+    in_sds: tuple                 # ShapeDtypeStructs (positional)
+    cfg: ModelConfig
+    shape: ShapeSpec
+    mesh: Mesh
+
+    def lower(self):
+        with self.mesh:
+            return self.jitted.lower(*self.in_sds)
+
+
+def params_sds(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_params(k, cfg), key)
+
+
+FSDP_THRESHOLD_BYTES = 10e9
+
+
+def needs_fsdp(cfg: ModelConfig, mesh: Mesh, p_sds=None) -> bool:
+    """TP-sharded params exceed the per-device budget -> ZeRO-3 the experts."""
+    if cfg.moe is None:
+        return False
+    p_sds = p_sds if p_sds is not None else params_sds(cfg)
+    total = sum(s.size * s.dtype.itemsize for s in jax.tree.leaves(p_sds))
+    return total / mesh.shape["model"] > FSDP_THRESHOLD_BYTES
+
+
+def _mesh_ctx(mesh: Mesh, fsdp: bool = False) -> MeshContext:
+    return MeshContext(mesh=mesh, dp_axes=dp_axes_of(mesh),
+                       tp_axis=tp_axis_of(mesh),
+                       fsdp_axis="data" if fsdp else None)
+
+
+def _opt_specs(opt_sds, p_specs, mesh: Mesh, zero1: bool):
+    """Optimizer-state specs mirror param specs; ZeRO-1 additionally shards
+    the leading dim over the data axis."""
+
+    def mirror(sds_leaf, spec):
+        spec = list(spec) + [None] * (len(sds_leaf.shape) - len(spec))
+        spec = spec[:len(sds_leaf.shape)]
+        used = {a for e in spec if e for a in
+                (e if isinstance(e, tuple) else (e,))}
+        if zero1 and "data" not in used:
+            if spec and spec[0] is None and sds_leaf.shape \
+                    and sds_leaf.shape[0] % mesh.shape["data"] == 0:
+                spec = ["data"] + spec[1:]
+        return valid_spec(sds_leaf.shape, P(*spec), mesh)
+
+    def per_state(state, pspec_tree):
+        out = {}
+        for k, v in state.items():
+            if k == "step":
+                out[k] = P()
+            elif k in ("m",):
+                out[k] = jax.tree.map(lambda s, ps: mirror(s, ps), v, pspec_tree)
+            elif k == "v":
+                # adamw: same shape as params; adafactor: {"vr","vc"}/{"v"} dicts
+                def leaf_is_state(x):
+                    return isinstance(x, dict) and (
+                        set(x) <= {"vr", "vc", "v"})
+                def spec_v(sub, ps):
+                    if isinstance(sub, dict):
+                        o = {}
+                        if "vr" in sub:
+                            o["vr"] = valid_spec(sub["vr"].shape,
+                                                 P(*list(ps)[:-1]), mesh)
+                            o["vc"] = valid_spec(
+                                sub["vc"].shape,
+                                P(*(list(ps)[:-2] + [list(ps) and list(ps)[-1]])),
+                                mesh)
+                        if "v" in sub:
+                            o["v"] = mirror(sub["v"], ps)
+                        return o
+                    return mirror(sub, ps)
+                out[k] = jax.tree.map(spec_v, v, pspec_tree,
+                                      is_leaf=leaf_is_state)
+            else:
+                out[k] = jax.tree.map(lambda s: P(*(None,) * len(s.shape)), v)
+        return out
+
+    return per_state(opt_sds, p_specs)
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *,
+                     opt_cfg: Optional[OptConfig] = None,
+                     options: Optional[StepOptions] = None,
+                     remat: bool = True) -> StepBundle:
+    opt_cfg = opt_cfg or OptConfig(
+        kind="adafactor" if (cfg.moe and cfg.moe.n_experts >= 256) else "adamw")
+    opts = default_options(cfg, shape, mesh, options)
+    p_sds = params_sds(cfg)
+    fsdp = needs_fsdp(cfg, mesh, p_sds)
+    dist = _mesh_ctx(mesh, fsdp)
+    shd = make_shd(mesh, dp=dist.dp_axes, tp=dist.tp_axis,
+                   seq_shard=opts.seq_shard)
+    dp = dp_axes_of(mesh)
+    mb = max(opts.microbatches, 1)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    lkw = dict(dist=dist, shd=shd, remat=remat,
+               remat_policy=opts.remat_policy, loss_chunks=opts.loss_chunks)
+
+    def train_step(params, opt_state, batch):
+        if mb == 1:
+            (loss, (ce, aux)), grads = grad_fn(params, batch, cfg, **lkw)
+        else:
+            def resh(x):
+                y = x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+                spec = valid_spec(y.shape, P(None, dp, *((None,) * (y.ndim - 2))),
+                                  mesh)
+                return jax.lax.with_sharding_constraint(
+                    y, NamedSharding(mesh, spec))
+
+            mbatch = jax.tree.map(resh, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, mbx):
+                g, l, c, a = carry
+                (li, (ci, ai)), gi = grad_fn(params, mbx, cfg, **lkw)
+                g = jax.tree.map(lambda x, y: x + y.astype(jnp.float32), g, gi)
+                return (g, l + li, c + ci, a + ai), None
+
+            (grads, loss, ce, aux), _ = jax.lax.scan(
+                acc, (g0, 0.0, 0.0, 0.0), mbatch)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            loss, ce, aux = loss / mb, ce / mb, aux / mb
+        new_params, new_opt, om = opt_update(opt_cfg, grads, opt_state, params)
+        metrics = {"loss": loss, "ce": ce, "aux": aux, **om}
+        return new_params, new_opt, metrics
+
+    o_sds = jax.eval_shape(lambda p: opt_init(opt_cfg, p), p_sds)
+    b_sds = batch_specs(cfg, shape)
+
+    p_specs = param_specs(p_sds, cfg, mesh, fsdp_experts=fsdp)
+    o_specs = _opt_specs(o_sds, p_specs, mesh, opts.zero1)
+    b_pspecs = batch_pspecs(b_sds, mesh)
+    donate = opts.donate
+
+    to_sh = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t)
+    in_sh = (to_sh(p_specs), to_sh(o_specs), to_sh(b_pspecs))
+    out_sh = (to_sh(p_specs), to_sh(o_specs),
+              jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                           jax.eval_shape(lambda: {
+                               "loss": jnp.zeros(()), "ce": jnp.zeros(()),
+                               "aux": jnp.zeros(()), "lr": jnp.zeros(()),
+                               "grad_norm": jnp.zeros(())})))
+    jitted = jax.jit(train_step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0, 1) if donate else ())
+    return StepBundle("train", train_step, jitted, (p_sds, o_sds, b_sds),
+                      cfg, shape, mesh)
+
+
+def build_serve_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *,
+                     mode: str = "decode",
+                     options: Optional[StepOptions] = None) -> StepBundle:
+    """mode='decode': one new token against a seq_len KV cache.
+    mode='prefill': process seq_len tokens, filling the cache."""
+    opts = default_options(cfg, shape, mesh, options)
+    donate = opts.donate
+    p_sds = params_sds(cfg)
+    fsdp = needs_fsdp(cfg, mesh, p_sds)
+    dist = _mesh_ctx(mesh, fsdp)
+    shd = make_shd(mesh, dp=dist.dp_axes, tp=dist.tp_axis,
+                   seq_shard=(opts.seq_shard and mode == "prefill"))
+    b, s = shape.global_batch, shape.seq_len
+    el = encoder_len(cfg, shape)
+
+    def serve_decode(params, tokens, cache, cache_index):
+        logits, _, new_cache = forward(
+            params, tokens, cfg, cache=cache, cache_index=cache_index,
+            dist=dist, shd=shd)
+        return logits, new_cache
+
+    def serve_prefill(params, tokens, cache, cache_index, **enc):
+        logits, _, new_cache = forward(
+            params, tokens, cfg, cache=cache, cache_index=cache_index,
+            dist=dist, shd=shd, **enc)
+        return logits, new_cache
+
+    cache_sds = jax.eval_shape(
+        lambda: make_cache(cfg, b, s, src_len=max(el, 1)))
+    p_specs = param_specs(p_sds, cfg, mesh, fsdp_experts=fsdp)
+    c_specs = cache_specs(cache_sds, cfg, mesh, dp=dist.dp_axes)
+    to_sh = lambda t: jax.tree.map(lambda sp: NamedSharding(mesh, sp), t)
+    dp = dist.dp_axes
+
+    if mode == "decode":
+        tok_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        tok_sh = NamedSharding(mesh, valid_spec((b, 1), P(dp, None), mesh))
+        idx_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        in_sh = (to_sh(p_specs), tok_sh, to_sh(c_specs),
+                 NamedSharding(mesh, P()))
+        logits_sh = NamedSharding(
+            mesh, valid_spec((b, 1, cfg.vocab_size), P(dp, None, "model"), mesh))
+        jitted = jax.jit(serve_decode, in_shardings=in_sh,
+                         out_shardings=(logits_sh, to_sh(c_specs)),
+                         donate_argnums=(2,) if donate else ())
+        in_sds = (p_sds, tok_sds, cache_sds, idx_sds)
+        return StepBundle("decode", serve_decode, jitted, in_sds, cfg, shape, mesh)
+
+    # prefill (encoder inputs, when present, are positional for AOT lowering)
+    tok_sds = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    tok_sh = NamedSharding(mesh, valid_spec((b, s), P(dp, None), mesh))
+    idx_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    enc_sds = {}
+    if cfg.n_encoder_layers:
+        enc_sds["encoder_tokens"] = jax.ShapeDtypeStruct((b, el, cfg.d_model),
+                                                         cfg.cdtype)
+    elif cfg.frontend == "vision_patches":
+        enc_sds["frontend_embeds"] = jax.ShapeDtypeStruct((b, el, cfg.d_model),
+                                                          cfg.cdtype)
+    enc_sh = [NamedSharding(mesh, valid_spec(v.shape, P(dp, None, None), mesh))
+              for v in enc_sds.values()]
+    logits_sh = NamedSharding(
+        mesh, valid_spec((b, s, cfg.vocab_size), P(dp, None, "model"), mesh))
+    names = list(enc_sds)
+
+    def serve_prefill_pos(params, tokens, cache, cache_index, *enc_vals):
+        return serve_prefill(params, tokens, cache, cache_index,
+                             **dict(zip(names, enc_vals)))
+
+    jitted = jax.jit(
+        serve_prefill_pos,
+        in_shardings=(to_sh(p_specs), tok_sh, to_sh(c_specs),
+                      NamedSharding(mesh, P()), *enc_sh),
+        out_shardings=(logits_sh, to_sh(c_specs)),
+        donate_argnums=(2,) if donate else ())
+    in_sds = (p_sds, tok_sds, cache_sds, idx_sds, *enc_sds.values())
+    return StepBundle("prefill", serve_prefill_pos, jitted, in_sds,
+                      cfg, shape, mesh)
+
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of one benchmark
+    cell (weak-type-correct, shardable, no device allocation) — the
+    dry-run contract.  For trains: {tokens, labels, ...}; for serving:
+    {params, tokens, cache, cache_index, ...}."""
+    from repro.configs import SHAPES, get_config
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return batch_specs(cfg, shape)
+    b, s = shape.global_batch, shape.seq_len
+    el = encoder_len(cfg, shape)
+    out = {
+        "params": params_sds(cfg),
+        "tokens": jax.ShapeDtypeStruct(
+            (b, 1 if shape.kind == "decode" else s), jnp.int32),
+        "cache": jax.eval_shape(
+            lambda: make_cache(cfg, b, s, src_len=max(el, 1))),
+        "cache_index": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if shape.kind == "prefill":
+        if cfg.n_encoder_layers:
+            out["encoder_tokens"] = jax.ShapeDtypeStruct(
+                (b, el, cfg.d_model), cfg.cdtype)
+        elif cfg.frontend == "vision_patches":
+            out["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, el, cfg.d_model), cfg.cdtype)
+    return out
+
+
+def build_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+               options: Optional[StepOptions] = None, **kw) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, options=options, **kw)
+    if shape.kind == "prefill":
+        return build_serve_step(cfg, shape, mesh, mode="prefill",
+                                options=options, **kw)
+    return build_serve_step(cfg, shape, mesh, mode="decode",
+                            options=options, **kw)

@@ -1,0 +1,260 @@
+"""Attention: GQA, sliding-window, logit softcap, cross-attention, KV cache.
+
+This is the pure-XLA reference path used for distribution lowering and smoke
+tests; the Pallas flash/decode kernels in ``repro/kernels`` implement the
+same math as the TPU-target hot-spot (see kernels/*/ref.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.common import apply_rope, dense_init, softcap, split_keys
+
+NEG_INF = -2.3819763e38  # large negative, bf16-safe
+
+
+def attention_init(key, cfg: ModelConfig, cross: bool = False):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * hd), cfg.pdtype),
+        "wk": dense_init(ks[1], (d, hkv * hd), cfg.pdtype),
+        "wv": dense_init(ks[2], (d, hkv * hd), cfg.pdtype),
+        "wo": dense_init(ks[3], (hq * hd, d), cfg.pdtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((hq * hd,), cfg.pdtype)
+        p["bk"] = jnp.zeros((hkv * hd,), cfg.pdtype)
+        p["bv"] = jnp.zeros((hkv * hd,), cfg.pdtype)
+    return p
+
+
+def _project(params, x, cfg, name, heads):
+    y = x @ params[f"w{name}"]
+    if f"b{name}" in params:
+        y = y + params[f"b{name}"].astype(y.dtype)
+    b, s = x.shape[0], x.shape[1]
+    return y.reshape(b, s, heads, cfg.hd)
+
+
+def _expand_kv(k, g):
+    """(B,T,HKV,hd) -> (B,T,HQ,hd).  The repeat keeps the head axis a single
+    contiguous dim so GSPMD shards it cleanly on the model axis (a (HKV,G)
+    split would not be expressible with one mesh axis)."""
+    return jnp.repeat(k, g, axis=2) if g > 1 else k
+
+
+def _mask(q_positions, kv_positions, causal, window, kv_valid):
+    m = jnp.ones(q_positions.shape[:1] + (q_positions.shape[1],
+                                          kv_positions.shape[1]), bool)
+    if causal:
+        m &= q_positions[:, :, None] >= kv_positions[:, None, :]
+    if window:
+        m &= (q_positions[:, :, None] - kv_positions[:, None, :]) < window
+    if kv_valid is not None:
+        m &= kv_valid[:, None, :]
+    return m                                             # (B,S,T)
+
+
+def mha(q, k, v, *, scale, causal, window, cap,
+        q_positions, kv_positions, kv_valid=None):
+    """Dense attention core (small sequences / decode).
+
+    q: (B,S,HQ,hd)  k/v: (B,T,HKV,hd)
+    q_positions: (B,S) | kv_positions: (B,T) | kv_valid: (B,T) bool or None
+    """
+    b, s, hq, hd = q.shape
+    g = hq // k.shape[2]
+    k, v = _expand_kv(k, g), _expand_kv(v, g)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    scores = softcap(scores, cap)
+    mask = _mask(q_positions, kv_positions, causal, window, kv_valid)
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v)
+    return out
+
+
+def flash_mha(q, k, v, *, scale, causal, window, cap,
+              q_positions, kv_positions, kv_valid=None, block_kv: int = 512):
+    """Flash-style attention: online softmax over KV blocks inside a scan —
+    the (S,T) score matrix never materializes (this is the XLA analogue of
+    the Pallas kernel in repro/kernels/flash_attention).
+
+    Each block body is checkpointed so backward re-computes block scores
+    instead of saving them.
+    """
+    b, s, hq, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    nk = -(-t // block_kv)
+    pad = nk * block_kv - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)))
+        valid = jnp.ones((b, t), bool) if kv_valid is None else kv_valid
+        kv_valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    qf = q.astype(jnp.float32)
+
+    kb = k.reshape(b, nk, block_kv, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nk, block_kv, hkv, hd).transpose(1, 0, 2, 3, 4)
+    pb = kv_positions.reshape(b, nk, block_kv).transpose(1, 0, 2)
+    if kv_valid is not None:
+        valb = kv_valid.reshape(b, nk, block_kv).transpose(1, 0, 2)
+    else:
+        valb = jnp.ones((nk, b, block_kv), bool)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kj, vj, posj, valj = blk
+        kj = _expand_kv(kj, g).astype(jnp.float32)
+        vj = _expand_kv(vj, g).astype(jnp.float32)
+        sc = jnp.einsum("bshd,bthd->bhst", qf, kj) * scale   # (B,H,S,Bk)
+        sc = softcap(sc, cap)
+        msk = _mask(q_positions, posj, causal, window, valj)
+        sc = jnp.where(msk[:, None], sc, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhst,bthd->bhsd", p, vj)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hq, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, s), jnp.float32)
+    a0 = jnp.zeros((b, hq, s, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
+                                  (kb, vb, pb, valb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)     # (B,S,H,hd)
+
+
+FLASH_MIN_SEQ = 1024
+
+
+def attention_core(q, k, v, **kw):
+    s, t = q.shape[1], k.shape[1]
+    if s >= FLASH_MIN_SEQ and t >= FLASH_MIN_SEQ:
+        return flash_mha(q, k, v, **kw)
+    return mha(q, k, v, **kw)
+
+
+def attention_fwd(
+    params,
+    x,
+    cfg: ModelConfig,
+    *,
+    positions,                      # (B,S) int32 positions of x tokens
+    causal: bool = True,
+    window: int = 0,
+    is_cross: bool = False,
+    cross_kv: Optional[jax.Array] = None,   # (B,T,d) encoder/image states
+    cache: Optional[dict] = None,           # {"k","v"}: (B,Tmax,HKV,hd)
+    cache_index: Optional[jax.Array] = None,  # scalar int32 write offset
+    lengths: Optional[jax.Array] = None,    # (B,) per-row lengths (cont. batching)
+    shd=None,                               # sharding hook (head-parallel attn)
+):
+    """Returns (out (B,S,d), new_cache|None).
+
+    Cross attention: if ``cross_kv`` is given, K/V are (re)computed from it
+    (and written into ``cache`` when one is passed — prefill).  If
+    ``cross_kv`` is None but ``is_cross``, K/V come from the cache (decode).
+    """
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    scale = cfg.attn_scale or cfg.hd ** -0.5
+    b, s = x.shape[0], x.shape[1]
+
+    q = _project(params, x, cfg, "q", hq)
+    new_cache = None
+
+    if is_cross:
+        if cross_kv is not None:
+            src = cross_kv.astype(x.dtype)
+            k = _project(params, src, cfg, "k", hkv)
+            v = _project(params, src, cfg, "v", hkv)
+            if cache is not None:
+                new_cache = {"k": k.astype(cache["k"].dtype),
+                             "v": v.astype(cache["v"].dtype)}
+        else:
+            assert cache is not None, "cross-attn decode needs a cross cache"
+            k, v = cache["k"], cache["v"]
+            new_cache = cache
+        t = k.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+        out = attention_core(q, k, v, scale=scale, causal=False, window=0,
+                             cap=cfg.attn_softcap, q_positions=positions,
+                             kv_positions=kv_pos)
+    else:
+        k = _project(params, x, cfg, "k", hkv)
+        v = _project(params, x, cfg, "v", hkv)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        if shd is not None:
+            if s == 1 and cache is not None:
+                # decode: the q row is tiny — replicate it over tp and keep
+                # the KV cache in place (T- or head-sharded per its spec).
+                # Forcing head-sharded q here makes GSPMD all-gather the
+                # ENTIRE cache per layer per token (~GBs/step).
+                q = shd("q_decode", q)
+            else:
+                q = shd("q_heads", q)
+                k = shd("kv_heads", k)
+                v = shd("kv_heads", v)
+        if cache is not None:
+            if lengths is not None:
+                # continuous-batching decode (S == 1): each row writes at its
+                # own length and sees only its own prefix
+                assert s == 1, "per-row lengths only for single-token decode"
+                rows = jnp.arange(b)
+                ck = cache["k"].at[rows, lengths].set(k[:, 0], mode="drop")
+                cv = cache["v"].at[rows, lengths].set(v[:, 0], mode="drop")
+                new_cache = {"k": ck, "v": cv}
+                tmax = ck.shape[1]
+                kv_pos = jnp.broadcast_to(jnp.arange(tmax, dtype=jnp.int32),
+                                          (b, tmax))
+                kv_valid = kv_pos <= lengths[:, None]
+                out = attention_core(q, ck, cv, scale=scale, causal=causal,
+                                     window=window, cap=cfg.attn_softcap,
+                                     q_positions=positions,
+                                     kv_positions=kv_pos, kv_valid=kv_valid)
+                out = out.reshape(b, s, hq * cfg.hd) @ params["wo"]
+                return out, new_cache
+            # append k/v at cache_index, attend over the full cache
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_index, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_index, 1)
+            new_cache = {"k": ck, "v": cv}
+            tmax = ck.shape[1]
+            kv_pos = jnp.broadcast_to(jnp.arange(tmax, dtype=jnp.int32), (b, tmax))
+            kv_valid = kv_pos < (cache_index + s)
+            out = attention_core(q, ck, cv, scale=scale, causal=causal,
+                                 window=window, cap=cfg.attn_softcap,
+                                 q_positions=positions, kv_positions=kv_pos,
+                                 kv_valid=kv_valid)
+        else:
+            out = attention_core(q, k, v, scale=scale, causal=causal,
+                                 window=window, cap=cfg.attn_softcap,
+                                 q_positions=positions, kv_positions=positions)
+
+    if shd is not None and s == 1 and cache is not None and not is_cross:
+        # keep the whole decode attention replicated-q / sharded-KV; only
+        # the tiny (B,1,D) activation reshards before the wo matmul
+        out = shd("q_decode", out)
+    out = out.reshape(b, s, hq * cfg.hd) @ params["wo"]
+    return out, new_cache
+
+
+def make_self_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_cross_cache(params, cfg: ModelConfig, cross_kv):
+    """Precompute cross-attention K/V from encoder/image states."""
+    k = _project(params, cross_kv, cfg, "k", cfg.n_kv_heads)
+    v = _project(params, cross_kv, cfg, "v", cfg.n_kv_heads)
+    return {"k": k, "v": v}

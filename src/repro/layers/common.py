@@ -1,0 +1,100 @@
+"""Shared layer primitives: norms, rotary embeddings, MLPs, init helpers.
+
+All forwards are pure functions ``f(params, x, cfg, ...)`` over pytree params
+so they compose with jit/scan/pjit without a module framework.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# --------------------------------------------------------------------- init
+def dense_init(key, shape, dtype, scale: float = 0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# --------------------------------------------------------------------- norms
+def rmsnorm(x, weight, eps: float = 1e-5, plus_one: bool = False):
+    """RMSNorm in fp32 with cast-back (gemma uses (1+w) parameterization)."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:
+        w = w + 1.0
+    return (xf * w).astype(dtype)
+
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+# --------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]                        # broadcast over heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- mlp
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = split_keys(key, 3)
+    p = {"w_in": dense_init(ks[0], (d, f), cfg.pdtype),
+         "w_out": dense_init(ks[1], (f, d), cfg.pdtype)}
+    if cfg.glu:
+        p["w_gate"] = dense_init(ks[2], (d, f), cfg.pdtype)
+    return p
+
+
+def activation(x, act: str):
+    if act == "silu":
+        return jax.nn.silu(x)
+    if act == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(act)
+
+
+def mlp_fwd(params, x, cfg: ModelConfig):
+    h = x @ params["w_in"]
+    if cfg.glu:
+        h = activation(x @ params["w_gate"], cfg.act) * h
+    else:
+        h = activation(h, cfg.act)
+    return h @ params["w_out"]
+
+
+# --------------------------------------------------------------------- misc
+def softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+def embed_tokens(embedding, tokens, cfg: ModelConfig):
+    x = jnp.take(embedding, tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def unembed(x, embedding, head, cfg: ModelConfig):
+    w = embedding.T if cfg.tie_embeddings else head
+    logits = x @ w.astype(x.dtype)
+    return softcap(logits.astype(jnp.float32), cfg.final_softcap)

@@ -1,0 +1,121 @@
+"""Mamba (S6) selective-state-space mixer, used by the Jamba hybrid stack.
+
+Forward over a segment runs a chunked time scan: `jax.checkpoint` on each
+chunk body keeps backward memory at O(chunk-boundary states) instead of
+O(T) full states.  Decode is a single-step state update.
+
+State per layer: {"conv": (B, d_conv-1, d_inner), "h": (B, d_inner, d_state)}.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.common import dense_init, split_keys
+
+TIME_CHUNK = 256
+
+
+def _dims(cfg: ModelConfig):
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, m.d_state, m.d_conv, dt_rank
+
+
+def mamba_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, d_state, d_conv, dt_rank = _dims(cfg)
+    ks = split_keys(key, 6)
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None],
+                 (d_inner, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_inner), cfg.pdtype),
+        "conv_w": dense_init(ks[1], (d_conv, d_inner), cfg.pdtype, scale=0.1),
+        "conv_b": jnp.zeros((d_inner,), cfg.pdtype),
+        "x_proj": dense_init(ks[2], (d_inner, dt_rank + 2 * d_state), cfg.pdtype),
+        "dt_w": dense_init(ks[3], (dt_rank, d_inner), cfg.pdtype),
+        "dt_b": jnp.full((d_inner,), -4.6, jnp.float32),   # softplus ~ 0.01
+        "A_log": jnp.log(a),                               # (d_inner, d_state)
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[4], (d_inner, d), cfg.pdtype),
+    }
+
+
+def _conv_causal(x, w, b, prev):
+    """Depthwise causal conv.  x: (B,S,di); w: (K,di); prev: (B,K-1,di)."""
+    k = w.shape[0]
+    xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)       # (B,S+K-1,di)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None] for i in range(k))
+    return out + b[None, None].astype(x.dtype), xp[:, -(k - 1):, :]
+
+
+def _ssm_params(params, xc, cfg: ModelConfig):
+    """xc: (B,S,di) post-conv activations -> dt (B,S,di), Bm/Cm (B,S,ds)."""
+    d_inner, d_state, _, dt_rank = _dims(cfg)
+    proj = (xc @ params["x_proj"]).astype(jnp.float32)
+    dt, bm, cm = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_w"].astype(jnp.float32)
+                         + params["dt_b"])
+    return dt, bm, cm
+
+
+def _scan_chunk(h0, xs, a):
+    """Per-step selective scan over one chunk.
+
+    h0: (B,di,ds); xs = (xc, dt, bm, cm) each (B,C,...); a: (di,ds) = -A.
+    """
+    def step(h, inp):
+        xc_t, dt_t, bm_t, cm_t = inp                    # (B,di),(B,di),(B,ds)x2
+        da = jnp.exp(dt_t[..., None] * a[None])         # (B,di,ds)
+        dbx = (dt_t * xc_t)[..., None] * bm_t[:, None, :]
+        h = da * h + dbx
+        y = jnp.einsum("bds,bs->bd", h, cm_t)
+        return h, y
+
+    xs_t = jax.tree.map(lambda v: v.swapaxes(0, 1), xs)  # (C,B,...)
+    h, ys = jax.lax.scan(step, h0, xs_t)
+    return h, ys.swapaxes(0, 1)                          # (B,C,di)
+
+
+def mamba_fwd(params, x, cfg: ModelConfig, state=None):
+    """x: (B,S,D) -> (out (B,S,D), new_state)."""
+    b, s, d = x.shape
+    d_inner, d_state, d_conv, _ = _dims(cfg)
+    if state is None:
+        state = {"conv": jnp.zeros((b, d_conv - 1, d_inner), x.dtype),
+                 "h": jnp.zeros((b, d_inner, d_state), jnp.float32)}
+    xz = x @ params["in_proj"]
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _conv_causal(xr, params["conv_w"], params["conv_b"],
+                                  state["conv"])
+    xc = jax.nn.silu(xc)
+    dt, bm, cm = _ssm_params(params, xc, cfg)
+    a = -jnp.exp(params["A_log"])                        # (di,ds), negative
+    xcf = xc.astype(jnp.float32)
+
+    if s == 1:
+        h, ys = _scan_chunk(state["h"], (xcf, dt, bm, cm), a)
+    else:
+        chunk = min(TIME_CHUNK, s)
+        pad = (-s) % chunk
+        if pad:
+            pf = lambda v: jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+            xcf_, dt_, bm_, cm_ = pf(xcf), pf(dt), pf(bm), pf(cm)
+        else:
+            xcf_, dt_, bm_, cm_ = xcf, dt, bm, cm
+        n = xcf_.shape[1] // chunk
+        resh = lambda v: v.reshape(b, n, chunk, v.shape[-1]).swapaxes(0, 1)
+        xs = (resh(xcf_), resh(dt_), resh(bm_), resh(cm_))
+
+        body = jax.checkpoint(functools.partial(_scan_chunk, a=a))
+        h, ys = jax.lax.scan(lambda c, xx: body(c, xx), state["h"], xs)
+        ys = ys.swapaxes(0, 1).reshape(b, n * chunk, d_inner)[:, :s]
+
+    y = ys + params["D"][None, None] * xcf
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return out, {"conv": conv_state, "h": h}

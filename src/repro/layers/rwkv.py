@@ -1,0 +1,195 @@
+"""RWKV6 (Finch) time-mix + channel-mix with data-dependent decay.
+
+Recurrence semantics (per head, state S in R^{hd_k x hd_v}):
+
+    o_t = r_t @ S_{t-1}  +  (r_t . (u (.) k_t)) v_t
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+
+with w_t = exp(-exp(w0 + lora(x))) in (0,1) data-dependent per channel.
+
+Two execution forms with identical math:
+  * per-step recurrence (decode; also the oracle in kernels/rwkv6/ref.py)
+  * chunked parallel form (train/prefill): within-chunk pairwise decays are
+    computed in log space, exp() only of non-positive quantities -> no
+    overflow for any decay magnitude.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.common import dense_init, split_keys
+
+DECAY_LORA = 64
+CHUNK = 16
+
+
+def rwkv_time_init(key, cfg: ModelConfig):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = split_keys(key, 10)
+    return {
+        "mix_r": jnp.full((d,), 0.5, cfg.pdtype),
+        "mix_k": jnp.full((d,), 0.5, cfg.pdtype),
+        "mix_v": jnp.full((d,), 0.5, cfg.pdtype),
+        "mix_w": jnp.full((d,), 0.5, cfg.pdtype),
+        "mix_g": jnp.full((d,), 0.5, cfg.pdtype),
+        "wr": dense_init(ks[0], (d, h * hd), cfg.pdtype),
+        "wk": dense_init(ks[1], (d, h * hd), cfg.pdtype),
+        "wv": dense_init(ks[2], (d, h * hd), cfg.pdtype),
+        "wg": dense_init(ks[3], (d, h * hd), cfg.pdtype),
+        "wo": dense_init(ks[4], (h * hd, d), cfg.pdtype),
+        # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((h * hd,), -6.0, jnp.float32),
+        "wA": dense_init(ks[5], (d, DECAY_LORA), cfg.pdtype),
+        "wB": dense_init(ks[6], (DECAY_LORA, h * hd), cfg.pdtype),
+        "u": dense_init(ks[7], (h, hd), jnp.float32, scale=0.5),
+        "ln_scale": jnp.ones((h, hd), jnp.float32),
+        "ln_bias": jnp.zeros((h, hd), jnp.float32),
+    }
+
+
+def rwkv_channel_init(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = split_keys(key, 2)
+    return {
+        "mix_k": jnp.full((d,), 0.5, cfg.pdtype),
+        "wk": dense_init(ks[0], (d, f), cfg.pdtype),
+        "wv": dense_init(ks[1], (f, d), cfg.pdtype),
+    }
+
+
+def _token_shift(x, prev, mix):
+    """x: (B,S,D); prev: (B,D) last token of previous segment."""
+    shifted = jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+    return x + mix.astype(x.dtype) * (shifted - x)
+
+
+def _head_ln(o, scale, bias, eps=1e-5):
+    """Per-head layernorm (RWKV GroupNorm with groups == heads)."""
+    of = o.astype(jnp.float32)
+    mu = jnp.mean(of, axis=-1, keepdims=True)
+    var = jnp.var(of, axis=-1, keepdims=True)
+    return (of - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def wkv_chunked(r, k, v, logw, u, s0, chunk: int = CHUNK):
+    """Chunked-parallel WKV6.
+
+    r,k,v: (B,T,H,hd) f32; logw: (B,T,H,hd) f32 (log decay, <= 0)
+    u: (H,hd) f32; s0: (B,H,hd,hd) f32 initial state.
+    Returns o: (B,T,H,hd) f32, sT.
+    """
+    b, t, h, hd = r.shape
+    assert t % chunk == 0, (t, chunk)
+    n = t // chunk
+    rs = r.reshape(b, n, chunk, h, hd).transpose(1, 0, 3, 2, 4)   # (n,B,H,C,hd)
+    ks_ = k.reshape(b, n, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(b, n, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    lw = logw.reshape(b, n, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool), -1)          # strict
+    eye = jnp.eye(chunk, dtype=jnp.float32)
+
+    def body(s, xs):
+        rc, kc, vc, lwc = xs                                       # (B,H,C,hd)
+        cum = jnp.cumsum(lwc, axis=2)                              # inclusive
+        cum_exc = cum - lwc                                        # exclusive
+        # pairwise decay exp(cum_exc[t] - cum[s]) for s < t  (always <= 0)
+        pair = cum_exc[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,H,C,C,hd)
+        pair = jnp.where(causal[None, None, :, :, None], pair, -jnp.inf)
+        m = jnp.exp(pair)
+        a = jnp.einsum("bhti,bhsi,bhtsi->bhts", rc, kc, m)
+        diag_vals = jnp.einsum("bhti,hi,bhti->bht", rc, u, kc)     # (B,H,C)
+        a = a + diag_vals[..., None] * eye[None, None]
+        inter = jnp.einsum("bhts,bhsj->bhtj", a, vc)
+        # cross-chunk: o += (r .* exp(cum_exc)) @ s
+        dq = jnp.exp(cum_exc)
+        cross = jnp.einsum("bhti,bhij->bhtj", rc * dq, s)
+        oc = inter + cross
+        # state update: s' = diag(exp(cum_T)) s + sum_s (k_s .* exp(cum_T-cum_s)) v_s
+        tot = cum[:, :, -1:, :]                                    # (B,H,1,hd)
+        dk = jnp.exp(tot - cum)                                    # (B,H,C,hd)
+        s_new = jnp.exp(tot[:, :, 0, :])[..., None] * s + \
+            jnp.einsum("bhsi,bhsj->bhij", kc * dk, vc)
+        return s_new, oc
+
+    # checkpoint: the (B,H,C,C,hd) pairwise-decay tensors are recomputed in
+    # backward instead of being stacked into scan residuals (10s of GB/dev)
+    sT, os_ = jax.lax.scan(jax.checkpoint(body), s0, (rs, ks_, vs, lw))
+    o = os_.transpose(1, 0, 3, 2, 4).reshape(b, t, h, hd)
+    return o, sT
+
+
+def wkv_step(r, k, v, logw, u, s):
+    """Single-token recurrence.  r,k,v,logw: (B,H,hd); s: (B,H,hd,hd)."""
+    w = jnp.exp(logw)
+    rkv = jnp.einsum("bhi,hi,bhi->bh", r, u, k)[..., None] * v
+    o = jnp.einsum("bhi,bhij->bhj", r, s) + rkv
+    s_new = w[..., None] * s + jnp.einsum("bhi,bhj->bhij", k, v)
+    return o, s_new
+
+
+def _rkvwg(params, x, cfg: ModelConfig, prev):
+    """Project token-shifted activations to r,k,v,logw,g."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    xr = _token_shift(x, prev, params["mix_r"])
+    xk = _token_shift(x, prev, params["mix_k"])
+    xv = _token_shift(x, prev, params["mix_v"])
+    xw = _token_shift(x, prev, params["mix_w"])
+    xg = _token_shift(x, prev, params["mix_g"])
+    r = (xr @ params["wr"]).astype(jnp.float32).reshape(b, s, h, hd)
+    k = (xk @ params["wk"]).astype(jnp.float32).reshape(b, s, h, hd)
+    v = (xv @ params["wv"]).astype(jnp.float32).reshape(b, s, h, hd)
+    g = xg @ params["wg"]
+    lora = jnp.tanh(xw @ params["wA"]) @ params["wB"]
+    logw = -jnp.exp(params["w0"] + lora.astype(jnp.float32))       # <= 0
+    logw = logw.reshape(b, s, h, hd)
+    return r, k, v, logw, g
+
+
+def rwkv_time_fwd(params, x, cfg: ModelConfig, state=None, shd=None):
+    """Time-mix over a full segment.  state: {"shift": (B,D), "s": (B,H,hd,hd)}.
+
+    shd: optional sharding hook — the WKV recurrence has no TP-shardable
+    head count (40 heads vs 16-way model axis), so "wkv"-tagged tensors are
+    batch-oversharded across data x model instead of replicated 16x.
+    """
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    if state is None:
+        state = {"shift": jnp.zeros((b, d), x.dtype),
+                 "s": jnp.zeros((b, h, hd, hd), jnp.float32)}
+    r, k, v, logw, g = _rkvwg(params, x, cfg, state["shift"])
+    if shd is not None and s > 1:
+        r, k, v, logw = (shd("wkv", t) for t in (r, k, v, logw))
+    if s == 1:
+        o, s_new = wkv_step(r[:, 0], k[:, 0], v[:, 0], logw[:, 0],
+                            params["u"], state["s"])
+        o = o[:, None]
+    else:
+        pad = (-s) % CHUNK
+        if pad:
+            zf = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            r, k, v = zf(r), zf(k), zf(v)
+            logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        o, s_new = wkv_chunked(r, k, v, logw, params["u"], state["s"])
+        o = o[:, :s]
+    o = _head_ln(o, params["ln_scale"], params["ln_bias"])
+    o = o.reshape(b, s, h * hd).astype(x.dtype)
+    o = o * jax.nn.silu(g)
+    out = o @ params["wo"]
+    new_state = {"shift": x[:, -1, :], "s": s_new}
+    return out, new_state
+
+
+def rwkv_channel_fwd(params, x, cfg: ModelConfig, state=None):
+    """Channel-mix (squared-relu FFN with token shift). state: {"shift": (B,D)}."""
+    b, s, d = x.shape
+    if state is None:
+        state = {"shift": jnp.zeros((b, d), x.dtype)}
+    xk = _token_shift(x, state["shift"], params["mix_k"])
+    k = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    out = k @ params["wv"]
+    return out, {"shift": x[:, -1, :]}

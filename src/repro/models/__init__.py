@@ -1,0 +1,3 @@
+from repro.models.transformer import (  # noqa: F401
+    init_params, forward, make_cache, loss_fn, param_count, active_param_count,
+)

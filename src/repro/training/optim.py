@@ -1,0 +1,138 @@
+"""Optimizers: AdamW and Adafactor (factored second moment — the memory-
+frugal choice for trillion-param configs like kimi-k2), plus global-norm
+clipping and cosine schedule.  Pure pytree transforms, no external deps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"           # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    # keep the original dtype: a full fp32 copy of trillion-param grads
+    # would double the gradient footprint
+    return jax.tree.map(lambda x: (x * scale.astype(x.dtype)), grads), g
+
+
+# ------------------------------------------------------------------ adamw
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params)}
+
+
+def adamw_update(cfg: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"step": step, "m": m, "v": v}, \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+# ------------------------------------------------------------------ adafactor
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params):
+    def per_leaf(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"step": jnp.zeros((), jnp.int32),
+            "v": jax.tree.map(per_leaf, params,
+                              is_leaf=lambda x: isinstance(x, jax.Array))}
+
+
+def adafactor_update(cfg: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    decay = 1.0 - step.astype(jnp.float32) ** -0.8
+
+    def upd(p, g, s):
+        g2 = g * g + 1e-30
+        if _factored(p.shape):
+            vr = decay * s["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * s["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            rfac = (vr / jnp.mean(vr, axis=-1, keepdims=True))[..., None]
+            u = g * jax.lax.rsqrt(rfac * vc[..., None, :] + 1e-30)
+            ns = {"vr": vr, "vc": vc}
+        else:
+            v = decay * s["v"] + (1 - decay) * g2
+            u = g * jax.lax.rsqrt(v + 1e-30)
+            ns = {"v": v}
+        # update clipping (RMS <= 1)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return newp, ns
+
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_s = treedef.flatten_up_to(state["v"])
+    outs = [upd(p, g, s) for p, g, s in zip(leaves_p, leaves_g, leaves_s)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_v = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return new_params, {"step": step, "v": new_v}, \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+# ------------------------------------------------------------------ facade
+def opt_init(cfg: OptConfig, params):
+    return adafactor_init(params) if cfg.kind == "adafactor" else adamw_init(params)
+
+
+def opt_update(cfg: OptConfig, grads, state, params):
+    if cfg.kind == "adafactor":
+        return adafactor_update(cfg, grads, state, params)
+    return adamw_update(cfg, grads, state, params)

@@ -1,0 +1,9 @@
+import os
+
+# keep tests on the single real device (the dry-run sets 512 itself,
+# in a separate process)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

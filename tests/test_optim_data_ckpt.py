@@ -1,0 +1,122 @@
+"""Optimizers, data pipeline, checkpoint manager, trainer FT loop."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config, reduced
+from repro.data.pipeline import DataConfig, Pipeline, make_batch
+from repro.training.loop import StragglerWatchdog, TrainConfig, Trainer
+from repro.training.optim import (
+    OptConfig, adafactor_init, adafactor_update, adamw_init, adamw_update,
+    clip_by_global_norm, schedule)
+
+
+# ------------------------------------------------------------ optimizers
+@pytest.mark.parametrize("kind", ["adamw", "adafactor"])
+def test_optimizer_reduces_quadratic(kind):
+    w = {"a": jnp.asarray([3.0, -2.0]), "b": jnp.ones((4, 8)) * 2}
+    cfg = OptConfig(kind=kind, lr=0.1, weight_decay=0.0, warmup_steps=0,
+                    total_steps=100, min_lr_frac=1.0)
+    init = adamw_init if kind == "adamw" else adafactor_init
+    upd = adamw_update if kind == "adamw" else adafactor_update
+    state = init(w)
+    loss = lambda p: sum(jnp.sum(x ** 2) for x in jax.tree.leaves(p))
+    l0 = float(loss(w))
+    for _ in range(50):
+        g = jax.grad(loss)(w)
+        w, state, _ = upd(cfg, g, state, w)
+    assert float(loss(w)) < 0.05 * l0
+
+
+def test_clip_preserves_dtype_and_norm():
+    g = {"x": jnp.ones((1000,), jnp.bfloat16) * 10}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert clipped["x"].dtype == jnp.bfloat16
+    from repro.training.optim import global_norm
+    assert float(global_norm(clipped)) < 1.1
+
+
+def test_schedule_warmup_and_decay():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    assert float(schedule(cfg, jnp.asarray(0))) == 0.0
+    assert abs(float(schedule(cfg, jnp.asarray(10))) - 1.0) < 1e-3
+    assert float(schedule(cfg, jnp.asarray(100))) <= 0.11
+
+
+# ------------------------------------------------------------ data
+def test_data_deterministic_and_seekable():
+    cfg = DataConfig(seed=7, batch=2, seq_len=16, vocab_size=100)
+    b1 = make_batch(cfg, 5)
+    b2 = make_batch(cfg, 5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    p = Pipeline(cfg, start_step=5)
+    b3 = next(p)
+    p.close()
+    np.testing.assert_array_equal(b1["tokens"], b3["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+# ------------------------------------------------------------ checkpoint
+def test_checkpoint_roundtrip_and_integrity(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), async_write=False)
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)}}
+    ckpt.save(3, tree)
+    assert ckpt.latest_step() == 3
+    restored = ckpt.restore(3, tree)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+    # corruption detection
+    d = tmp_path / "step_00000003"
+    victim = next(f for f in os.listdir(d) if f.endswith(".npy"))
+    arr = np.load(d / victim)
+    arr = arr.copy()
+    arr.flat[0] += 1
+    np.save(d / victim, arr)
+    with pytest.raises(IOError):
+        ckpt.restore(3, tree)
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+    for s in (1, 2, 3, 4):
+        ckpt.save(s, {"x": jnp.zeros(1)})
+    assert ckpt.all_steps() == [3, 4]
+
+
+# ------------------------------------------------------------ trainer FT
+def test_trainer_failure_resume_exact(tmp_path):
+    cfg = reduced(get_config("smollm-360m"), n_layers=2)
+    data = DataConfig(batch=2, seq_len=32, vocab_size=cfg.vocab_size)
+
+    def mk(fail):
+        return Trainer(cfg, data,
+                       TrainConfig(steps=12, ckpt_every=4,
+                                   ckpt_dir=str(tmp_path),
+                                   fail_at_step=fail))
+
+    # uninterrupted run
+    ref = mk(None).run()
+    import shutil
+    shutil.rmtree(tmp_path)
+    # crash at 8, restart
+    with pytest.raises(RuntimeError):
+        mk(8).run()
+    out = mk(None).run()
+    assert out["final_step"] == 12
+    # resumed training reaches the identical final loss (exact resume)
+    assert abs(out["history"][-1]["loss"] - ref["history"][-1]["loss"]) < 1e-6
+
+
+def test_straggler_watchdog():
+    w = StragglerWatchdog(window=10, z=3.0)
+    for i in range(8):
+        assert not w.observe(i, 0.1 + 0.001 * (i % 2))
+    assert w.observe(8, 5.0)        # 50x outlier flagged
+    assert w.flagged[0][0] == 8

@@ -1,0 +1,104 @@
+"""Pipeline parallelism, int8 KV cache, and trace export."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.device_model import PLATFORMS, simulate
+from repro.core.export import to_chrome_trace
+from repro.core.tracing import Kernel
+from repro.inference.kv_quant import (
+    make_quantized_cache, read_kv, write_kv)
+
+
+def _run_sub(code: str, devices: int = 4) -> str:
+    env = {"XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
+           "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu", "PATH": "/usr/bin:/bin"}
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         cwd="/root/repo", timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# ------------------------------------------------------------ pipeline
+def test_pipeline_matches_sequential_multidevice():
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.distributed.pipeline import pipeline_forward, reference_forward
+    P, n_micro, mb, d = 4, 6, 2, 8
+    mesh = jax.make_mesh((P,), ("pipe",))
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (P, d, d)) * 0.3,
+              "b": jax.random.normal(key, (P, d)) * 0.1}
+    x = jax.random.normal(jax.random.PRNGKey(1), (n_micro, mb, d))
+    stage_fn = lambda p, x_: jnp.tanh(x_ @ p["w"] + p["b"])
+    y = pipeline_forward(stage_fn, params, x, mesh)
+    ref = reference_forward(stage_fn, params, x)
+    err = float(jnp.max(jnp.abs(y - ref)))
+    print("pp err", err)
+    assert err < 1e-5
+    print("PP_OK")
+    """
+    assert "PP_OK" in _run_sub(code)
+
+
+def test_pipeline_single_stage_degenerates():
+    code = """
+    import jax, jax.numpy as jnp
+    from repro.distributed.pipeline import pipeline_forward, reference_forward
+    mesh = jax.make_mesh((1,), ("pipe",))
+    params = {"w": jnp.eye(4)[None] * 2.0}
+    x = jnp.ones((3, 2, 4))
+    y = pipeline_forward(lambda p, x_: x_ @ p["w"], params, x, mesh)
+    assert jnp.allclose(y, 2 * x)
+    print("PP1_OK")
+    """
+    assert "PP1_OK" in _run_sub(code, devices=1)
+
+
+# ------------------------------------------------------------ int8 KV
+def test_kv_quant_roundtrip_accuracy():
+    key = jax.random.PRNGKey(0)
+    k = jax.random.normal(key, (2, 8, 4, 16))
+    cache = make_quantized_cache(2, 32, 4, 16)
+    cache = write_kv(cache, k, k * 0.5, jnp.asarray(0, jnp.int32))
+    kd, vd = read_kv(cache, jnp.float32)
+    rel = float(jnp.max(jnp.abs(kd[:, :8] - k)) / jnp.max(jnp.abs(k)))
+    assert rel < 0.02, rel           # int8 symmetric: <2% relative error
+
+
+def test_kv_quant_attention_close_to_fp():
+    """Decode attention over an int8 cache matches the fp cache closely."""
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    key = jax.random.PRNGKey(1)
+    B, H, T, hd = 2, 4, 32, 16
+    q = jax.random.normal(key, (B, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(2), (B, T, H, hd))
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, T, H, hd))
+    cache = make_quantized_cache(B, T, H, hd)
+    cache = write_kv(cache, k, v, jnp.asarray(0, jnp.int32))
+    kd, vd = read_kv(cache, jnp.float32)
+    o_q = decode_attention_ref(q, kd.transpose(0, 2, 1, 3),
+                               vd.transpose(0, 2, 1, 3), T, scale=0.25)
+    o_f = decode_attention_ref(q, k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3), T, scale=0.25)
+    assert float(jnp.max(jnp.abs(o_q - o_f))) < 0.05
+
+
+# ------------------------------------------------------------ export
+def test_chrome_trace_export(tmp_path):
+    ks = [Kernel(i, f"k{i}", None, 1e6, 1e5, ()) for i in range(5)]
+    ev = simulate(ks, PLATFORMS["GH200"])
+    doc = to_chrome_trace(ev, "GH200")
+    assert len(doc["traceEvents"]) == 10
+    host = [e for e in doc["traceEvents"] if e["tid"] == 0]
+    dev = [e for e in doc["traceEvents"] if e["tid"] == 1]
+    # device events never start before their launch call
+    for h, d in zip(host, dev):
+        assert d["ts"] >= h["ts"]
+    json.dumps(doc)                  # serializable

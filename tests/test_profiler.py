@@ -1,0 +1,161 @@
+"""SKIP profiler: tracing exactness, queue-sim invariants, TKLQT closed
+forms, boundedness inflection, proximity mining (Eqs. 6-8), chain-jit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.boundedness import find_inflection
+from repro.core.device_model import PLATFORMS, PlatformSpec, simulate
+from repro.core.metrics import report
+from repro.core.proximity import fusion_segments, mine_chains
+from repro.core.skip import SKIP
+from repro.core.tracing import Executor, Kernel, trace_fn
+
+
+def _toy_fn(x, w1, w2):
+    h = jax.nn.gelu(x @ w1)
+    h = jax.jit(lambda a: a * 2 + 1)(h)        # nested jit gets inlined
+    return jax.nn.softmax(h @ w2, axis=-1)
+
+
+def _toy_args():
+    key = jax.random.PRNGKey(0)
+    return (jax.random.normal(key, (4, 8)),
+            jax.random.normal(key, (8, 16)),
+            jax.random.normal(key, (16, 8)))
+
+
+# ------------------------------------------------------------ tracing
+def test_trace_and_eager_execution_match():
+    args = _toy_args()
+    tr = trace_fn(_toy_fn, *args)
+    assert len(tr.kernels) > 10
+    out, _ = Executor(tr).run(*args)
+    np.testing.assert_allclose(np.asarray(out[-1]),
+                               np.asarray(_toy_fn(*args)), atol=1e-6)
+
+
+def test_fused_segments_bit_identical():
+    args = _toy_args()
+    tr = trace_fn(_toy_fn, *args)
+    n = len(tr.kernels)
+    eager, _ = Executor(tr).run(*args)
+    for segs in ([[i] for i in range(n)],
+                 [list(range(n))],
+                 [list(range(n // 2)), list(range(n // 2, n))]):
+        out, _ = Executor(tr, segments=segs).run(*args)
+        np.testing.assert_array_equal(np.asarray(out[-1]),
+                                      np.asarray(eager[-1]))
+
+
+def test_nested_jit_inlined():
+    args = _toy_args()
+    tr = trace_fn(_toy_fn, *args)
+    assert "pjit" not in tr.kernel_names and "jit" not in tr.kernel_names
+
+
+# ------------------------------------------------------------ queue sim
+def _kernels(n, flops, bts):
+    return [Kernel(i, f"k{i}", None, flops, bts, ()) for i in range(n)]
+
+
+def test_tklqt_cpu_bound_closed_form():
+    """Tiny kernels, no queuing: TKLQT == n * launch overhead exactly."""
+    plat = PlatformSpec("T", "LC", 1000.0, 0.0, 1e15, 1e15,
+                        op_tax_ns=0.0, mxu_efficiency=1.0, bw_efficiency=1.0)
+    ks = _kernels(10, flops=1.0, bts=1.0)
+    ev = simulate(ks, plat)
+    rep = report(ev, "T", 1000e-9)
+    assert abs(rep.tklqt - 10 * 1000e-9) < 1e-12
+    assert rep.queue_share == 0.0
+
+
+def test_tklqt_gpu_bound_queuing():
+    """Huge kernels: queuing dominates, TKLQT >> n * launch."""
+    plat = PlatformSpec("T", "LC", 1000.0, 0.0, 1e12, 1e15,
+                        op_tax_ns=0.0, mxu_efficiency=1.0, bw_efficiency=1.0)
+    ks = _kernels(10, flops=1e9, bts=1.0)   # 1 ms per kernel
+    ev = simulate(ks, plat)
+    rep = report(ev, "T", 1000e-9)
+    assert rep.tklqt > 10 * 1000e-9 * 100
+    assert rep.queue_share > 0.9
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 30),
+       flops=st.floats(1.0, 1e10),
+       launch_ns=st.floats(100.0, 5000.0))
+def test_queue_sim_invariants(n, flops, launch_ns):
+    """Kernel start >= launch end; in-order; busy + idle == IL."""
+    plat = PlatformSpec("T", "LC", launch_ns, 100.0, 1e12, 1e12,
+                        op_tax_ns=0.0, mxu_efficiency=1.0, bw_efficiency=1.0)
+    ev = simulate(_kernels(n, flops, flops), plat)
+    for e in ev:
+        assert e.kernel_start >= e.launch_end - 1e-15
+        assert e.t_l >= 0 and e.duration > 0
+    for a, b in zip(ev, ev[1:]):
+        assert b.kernel_start >= a.kernel_end - 1e-15   # in-order stream
+    rep = report(ev, "T", launch_ns * 1e-9)
+    assert rep.gpu_idle >= -1e-12
+    total_busy = sum(e.duration for e in ev)
+    assert abs((rep.gpu_idle + total_busy) - rep.il) < 1e-12
+
+
+# ------------------------------------------------------------ boundedness
+def test_inflection_detection():
+    assert find_inflection([1, 2, 4, 8], [1.0, 1.0, 1.1, 2.0]) == 8
+    assert find_inflection([1, 2, 4, 8], [1.0, 1.0, 1.1, 1.2]) is None
+    assert find_inflection([1, 2, 4], [1.0, 2.0, 4.0]) == 2
+
+
+# ------------------------------------------------------------ proximity
+def test_proximity_score_exact():
+    seq = ["a", "b", "c"] * 10 + ["a", "x"]
+    res = mine_chains(seq, 2, threshold=0.0)
+    by_chain = {c.chain: c for c in res.candidates}
+    # f(("a","b")) = 10, f("a") = 11 -> PS = 10/11
+    assert by_chain[("a", "b")].frequency == 10
+    assert abs(by_chain[("a", "b")].ps - 10 / 11) < 1e-12
+    # ("b","c") is deterministic: f=10, f("b")=10 -> PS=1
+    assert by_chain[("b", "c")].ps == 1.0
+
+
+def test_eq7_eq8_exact():
+    seq = ["a", "b", "c", "d"] * 8           # 32 kernels
+    res = mine_chains(seq, 4, threshold=1.0)
+    assert res.c_fused == 8
+    assert res.k_fused == 32 - 8 * 3         # Eq. 7
+    assert abs(res.speedup - 32 / 8) < 1e-12  # Eq. 8
+
+
+def test_fusion_segments_cover():
+    seq = ["a", "b", "a", "b", "x", "a", "b"]
+    segs = fusion_segments(seq, 2)
+    flat = [i for s in segs for i in s]
+    assert flat == list(range(len(seq)))      # exact cover, in order
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.sampled_from("abcd"), min_size=4, max_size=60),
+       st.sampled_from([2, 3, 4]))
+def test_fusion_segments_property(seq, length):
+    segs = fusion_segments(seq, length)
+    flat = [i for s in segs for i in s]
+    assert flat == list(range(len(seq)))
+    res = mine_chains(seq, length, threshold=1.0)
+    # segment count == Eq. 7 launch count
+    assert len(segs) == res.k_fused
+
+
+# ------------------------------------------------------------ skip facade
+def test_skip_end_to_end():
+    args = _toy_args()
+    skip = SKIP.trace(_toy_fn, *args)
+    rep = skip.report("GH200", batch=1)
+    assert rep.tklqt > 0 and rep.il >= rep.tklqt * 0.5
+    sweep, _ = skip.batch_sweep("GH200", batches=(1, 4, 16, 64))
+    assert sweep.tklqt[0] <= sweep.tklqt[-1] + 1e-12
+    out = skip.fuse(length=4, repeats=1)
+    assert out.k_fused <= out.k_eager
+    assert out.max_abs_err < 1e-5

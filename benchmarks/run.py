@@ -3,11 +3,16 @@
     PYTHONPATH=src python -m benchmarks.run [--only nullkernel,tklqt_sweep]
 
 Prints ``name,us_per_call,derived`` CSV rows.  BENCH_FAST=1 trims depth.
+With ``--json-dir DIR`` (or ``BENCH_JSON=DIR``) each benchmark also writes
+a machine-readable ``BENCH_<name>.json`` artifact — rows, wall time,
+status — for CI perf-trajectory tracking.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
+import os
 import sys
 import time
 import traceback
@@ -25,10 +30,36 @@ BENCHES = [
 ]
 
 
+def _parse_row(row: str) -> dict:
+    name, us, derived = (row.split(",", 2) + ["", ""])[:3]
+    try:
+        us_f = float(us)
+    except ValueError:
+        us_f = None
+    return {"name": name, "us_per_call": us_f, "derived": derived}
+
+
+def _write_artifact(json_dir: str, name: str, payload: dict) -> None:
+    # artifacts are best-effort telemetry: a write failure must neither
+    # abort the remaining benchmarks nor relabel a passing one as failed
+    path = os.path.join(json_dir, f"BENCH_{name}.json")
+    try:
+        os.makedirs(json_dir, exist_ok=True)
+        with open(path, "w") as fh:
+            json.dump(payload, fh, indent=2)
+    except OSError as e:
+        print(f"# artifact write failed for {path}: {e!r}", flush=True)
+        return
+    print(f"# wrote {path}", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--json-dir", default=os.environ.get("BENCH_JSON"),
+                    help="write BENCH_<name>.json artifacts here "
+                         "(default: $BENCH_JSON, off when unset)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -38,15 +69,31 @@ def main() -> None:
         if only and name not in only:
             continue
         t0 = time.time()
+        rows: list[str] = []
         try:
             mod = importlib.import_module(module)
             for row in mod.run():
+                rows.append(row)
                 print(row, flush=True)
-            print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
+            elapsed = time.time() - t0
+            print(f"# {name} done in {elapsed:.0f}s", flush=True)
+            if args.json_dir:
+                _write_artifact(args.json_dir, name, {
+                    "name": name, "status": "ok",
+                    "elapsed_s": round(elapsed, 2),
+                    "fast_mode": bool(int(os.environ.get("BENCH_FAST", "0"))),
+                    "rows": [_parse_row(r) for r in rows],
+                })
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             failures.append((name, repr(e)))
             print(f"# {name} FAILED: {e!r}", flush=True)
+            if args.json_dir:
+                _write_artifact(args.json_dir, name, {
+                    "name": name, "status": "failed", "error": repr(e),
+                    "elapsed_s": round(time.time() - t0, 2),
+                    "rows": [_parse_row(r) for r in rows],
+                })
     if failures:
         sys.exit(1)
 

@@ -6,3 +6,6 @@ from repro.core.proximity import mine_chains, sweep_lengths  # noqa: F401
 from repro.core.fusion import apply_fusion             # noqa: F401
 from repro.core.boundedness import classify_sweep, find_inflection  # noqa: F401
 from repro.core.tracing import Executor, trace_fn      # noqa: F401
+# the launch-plan runtime lives in repro.runtime (LaunchPlan, Planner,
+# PlanExecutor); it is not re-exported here to keep the import graph
+# acyclic — core facades import it lazily inside their methods

@@ -1,16 +1,16 @@
-"""Chain-jit fusion engine — the paper recommends, we implement.
+"""Chain-jit fusion — thin facade over the launch-plan runtime.
 
-Takes proximity-score recommendations and compiles each deterministic chain
-into ONE XLA executable, then executes the workload with the reduced launch
-count.  Reports measured dispatch counts and host time against eager, plus
-the paper's idealized Eq. 8 speedup for comparison.
+Takes proximity-score recommendations, builds a chain ``LaunchPlan``, and
+runs both it and the eager plan through ``repro.runtime.PlanExecutor``.
+Reports measured dispatch counts and host time against eager, plus the
+paper's idealized Eq. 8 speedup for comparison.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
-from repro.core.proximity import fusion_segments, mine_chains
-from repro.core.tracing import Executor, Trace
+from repro.core.proximity import mine_chains
+from repro.core.tracing import Trace
 
 
 @dataclass
@@ -25,14 +25,26 @@ class FusionOutcome:
     max_abs_err: float             # fused vs eager outputs
 
 
+def _speedup(eager_host: float, fused_host: float) -> float:
+    """eager/fused with degenerate guards: 0-cost fused time on a nonzero
+    eager baseline is an infinite speedup, and 0/0 is undefined — neither
+    should silently report 0.0 (i.e. a slowdown)."""
+    if fused_host > 0.0:
+        return eager_host / fused_host
+    return float("inf") if eager_host > 0.0 else float("nan")
+
+
 def apply_fusion(trace: Trace, *args, length: int = 8,
                  repeats: int = 3) -> FusionOutcome:
+    from repro.runtime.executor import PlanExecutor
+    from repro.runtime.plan import LaunchPlan
+
     names = trace.kernel_names
     mining = mine_chains(names, length, threshold=1.0)
-    segs = fusion_segments(names, length)
 
-    eager = Executor(trace)
-    fused = Executor(trace, segments=segs)
+    eager = PlanExecutor(trace, LaunchPlan.eager(len(names)))
+    fused = PlanExecutor(trace, LaunchPlan.chain(names, length,
+                                                 mining=mining))
 
     t_e = eager.measure_host(*args, repeats=repeats)
     t_f = fused.measure_host(*args, repeats=repeats)
@@ -48,8 +60,8 @@ def apply_fusion(trace: Trace, *args, length: int = 8,
     eager_host = sum(t_e)
     fused_host = sum(t_f)
     return FusionOutcome(
-        length=length, k_eager=mining.k_eager, k_fused=len(segs),
+        length=length, k_eager=mining.k_eager, k_fused=fused.n_launches,
         ideal_speedup=mining.speedup,
         eager_host_s=eager_host, fused_host_s=fused_host,
-        measured_speedup=eager_host / fused_host if fused_host else 0.0,
+        measured_speedup=_speedup(eager_host, fused_host),
         max_abs_err=err)

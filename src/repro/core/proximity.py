@@ -41,8 +41,16 @@ class MiningResult:
 
 def mine_chains(seq: Sequence[str], length: int,
                 threshold: float = 1.0) -> MiningResult:
-    """Mine chains of a given length from one kernel-name sequence."""
+    """Mine chains of a given length from one kernel-name sequence.
+
+    Degenerate cases are explicit: a sequence shorter than ``length`` (or
+    empty, or ``length < 2``) has no mineable chains — every kernel stays
+    an eager launch and the speedup is exactly 1.0, never a division by a
+    zero/garbage ``k_fused``.
+    """
     n = len(seq)
+    if n == 0 or length < 2 or length > n:
+        return MiningResult(length, [], [], 0, 0, n, 0, n, 1.0)
     first = Counter(seq)
     chains = Counter()
     for i in range(n - length + 1):
@@ -67,17 +75,19 @@ def mine_chains(seq: Sequence[str], length: int,
             i += 1
     k_eager = n
     k_fused = k_eager - c_fused * (length - 1)                 # Eq. 7
-    speedup = k_eager / k_fused if k_fused else float("inf")   # Eq. 8
+    speedup = k_eager / k_fused if k_fused > 0 else float("inf")  # Eq. 8
     return MiningResult(length, cands, det, len(cands),
                         sum(c.frequency for c in cands), k_eager,
                         c_fused, k_fused, speedup)
 
 
-def fusion_segments(seq: Sequence[str], length: int) -> list[list[int]]:
+def fusion_segments(seq: Sequence[str], length: int,
+                    mining: "MiningResult | None" = None) -> list[list[int]]:
     """Segment the kernel sequence for the chain-jit engine: greedy
     non-overlapping deterministic chains become multi-eqn segments, the rest
-    stay singleton (eager)."""
-    res = mine_chains(seq, length, threshold=1.0)
+    stay singleton (eager).  Pass a precomputed ``mining`` result (for the
+    same seq/length at threshold 1.0) to skip re-mining."""
+    res = mining or mine_chains(seq, length, threshold=1.0)
     det = {c.chain for c in res.deterministic}
     segs, i, n = [], 0, len(seq)
     while i < n:

@@ -1,25 +1,40 @@
-"""SKIP facade: trace -> measure -> simulate -> classify -> recommend -> fuse.
+"""SKIP facade: trace -> measure -> simulate -> classify -> plan -> execute.
 
-Typical use (see examples/profile_and_fuse.py):
+Since the launch-plan runtime refactor, SKIP is a thin convenience layer
+over ``repro.runtime``: tracing produces a ``Trace``, every execution path
+(eager, chain-fused, whole-graph, cost-aware auto) is a ``LaunchPlan``,
+``Planner`` compares candidate plans analytically against the TKLQT device
+model, and ``PlanExecutor`` compiles/caches/runs the winner.  The legacy
+methods below keep their signatures and delegate.
+
+Typical use:
 
     skip = SKIP.trace(forward_fn, *example_args)
     skip.measure_host()                      # real dispatch costs, this host
     rep = skip.report("GH200", batch=8)      # modeled platform timeline
     sweep = skip.batch_sweep("GH200")        # TKLQT curve + inflection
     recs = skip.recommend(length=16)         # PS=1 chains (Eq. 6)
-    outcome = skip.fuse(length=16)           # actually fuse + measure
+    outcome = skip.fuse(length=16)           # chain plan: fuse + measure
+    choice = skip.plan("GH200")              # cost-aware auto LaunchPlan
+    ex = skip.executor(choice.plan)          # compiled-segment executor
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Optional, Sequence, Union
 
 from repro.core import boundedness as bnd
 from repro.core import proximity as prox
 from repro.core.device_model import PLATFORMS, PlatformSpec, simulate
 from repro.core.fusion import FusionOutcome, apply_fusion
 from repro.core.metrics import SkipReport, report
-from repro.core.tracing import Executor, Trace, trace_fn
+from repro.core.tracing import Trace, trace_fn
+
+# NOTE: repro.runtime is imported lazily inside methods — importing it at
+# module top would close a cycle (runtime -> core.tracing -> core ->
+# skip -> runtime) and break `import repro.runtime` as a first import.
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.runtime import LaunchPlan, PlanChoice, PlanExecutor, Planner
 
 DEFAULT_BATCHES = (1, 2, 4, 8, 16, 32, 64, 128)
 
@@ -38,7 +53,8 @@ class SKIP:
                    base_batch=base_batch)
 
     def measure_host(self, repeats: int = 3):
-        Executor(self.trace_).measure_host(*self.args, repeats=repeats)
+        from repro.runtime import PlanExecutor
+        PlanExecutor(self.trace_).measure_host(*self.args, repeats=repeats)
         self.host_measured = True
 
     # ------------------------------------------------------------ modeling
@@ -73,6 +89,26 @@ class SKIP:
         reps = [self.report(platform, b, use_host_scale=use_host_scale)
                 for b in batches]
         return bnd.classify_sweep(batches, reps), reps
+
+    # ------------------------------------------------------------ planning
+    def planner(self, platform: Union[str, PlatformSpec] = "TPU-v5e",
+                batch: Optional[int] = None,
+                use_host_scale: bool = True) -> "Planner":
+        from repro.runtime import Planner
+        scale = (batch or self.base_batch) / self.base_batch
+        hs = self._host_scale() if use_host_scale else None
+        return Planner(self.trace_, platform, batch_scale=scale,
+                       host_scale=hs)
+
+    def plan(self, platform: Union[str, PlatformSpec] = "TPU-v5e",
+             lengths: Sequence[int] = (2, 4, 8, 16, 32),
+             batch: Optional[int] = None) -> "PlanChoice":
+        """Cost-aware auto plan: lowest modeled TKLQT among candidates."""
+        return self.planner(platform, batch=batch).auto(lengths=lengths)
+
+    def executor(self, plan: Optional["LaunchPlan"] = None) -> "PlanExecutor":
+        from repro.runtime import PlanExecutor
+        return PlanExecutor(self.trace_, plan)
 
     # ------------------------------------------------------------ fusion
     def recommend(self, length: int = 8, threshold: float = 1.0):

@@ -13,14 +13,16 @@ timestamp-reconstructed graphs.
 """
 from __future__ import annotations
 
-import time
+import itertools
 from dataclasses import dataclass, field
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional
 
 import jax
 import jax.extend.core as jexc
 
 from repro.core.costs import eqn_costs
+
+_TRACE_TOKENS = itertools.count()
 
 # primitives whose sub-jaxprs we inline ("operators" containing child ops)
 _INLINE_PRIMS = {"pjit", "jit", "closed_call", "custom_jvp_call",
@@ -57,6 +59,11 @@ class Trace:
     out_vars: list
     kernels: list                   # list[Kernel], one per eqn
     example_args: tuple
+    flat_eqns: list = field(default_factory=list)   # [(eqn, rewritten invars)]
+    env_map: dict = field(default_factory=dict)     # outer var -> rewritten
+    closed: object = None           # the original ClosedJaxpr
+    out_tree: object = None         # output pytree structure of the traced fn
+    token: int = -1                 # unique id (compiled-segment cache key)
 
     @property
     def kernel_names(self) -> list[str]:
@@ -143,7 +150,7 @@ def _is_drop(v) -> bool:
 
 def trace_fn(fn: Callable, *example_args) -> Trace:
     """Flatten fn into a leaf-primitive kernel trace with cost estimates."""
-    closed = jax.make_jaxpr(fn)(*example_args)
+    closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*example_args)
     env_map: dict = {}
     flat: list = []
     _flatten(closed.jaxpr, env_map, flat)
@@ -156,139 +163,42 @@ def trace_fn(fn: Callable, *example_args) -> Trace:
                  in_vars=list(closed.jaxpr.invars),
                  out_vars=list(closed.jaxpr.outvars),
                  kernels=kernels, example_args=example_args,
-                 )._with_flat(flat, env_map, closed)
-
-
-# attach flattened eqns without polluting the dataclass signature
-def _with_flat(self, flat, env_map, closed):
-    self._flat = flat
-    self._env_map = env_map
-    self._closed = closed
-    return self
-
-
-Trace._with_flat = _with_flat
+                 flat_eqns=flat, env_map=env_map, closed=closed,
+                 out_tree=jax.tree.structure(out_shape),
+                 token=next(_TRACE_TOKENS))
 
 
 class Executor:
-    """Executes a trace in segments; each segment is one jitted executable
-    (= one 'kernel launch').  Eager mode: one segment per eqn."""
+    """Back-compat facade over ``repro.runtime.PlanExecutor``.
+
+    ``Executor(trace)`` is the eager plan (one jitted executable per eqn =
+    one 'kernel launch'); ``Executor(trace, segments=...)`` wraps an
+    explicit segment list.  New code should use the runtime types directly:
+    ``PlanExecutor(trace, LaunchPlan...)``.
+    """
 
     def __init__(self, trace: Trace, segments: Optional[list] = None):
+        from repro.runtime.executor import PlanExecutor
+        from repro.runtime.plan import LaunchPlan
+        plan = (LaunchPlan.from_segments(segments) if segments is not None
+                else LaunchPlan.eager(len(trace.kernels)))
         self.trace = trace
-        flat = trace._flat
-        n = len(flat)
-        self.segments = segments or [[i] for i in range(n)]
-        self._compiled = None
+        self._ex = PlanExecutor(trace, plan)
 
-    def _build(self):
-        trace = self.trace
-        flat = trace._flat
-        closed = trace._closed
-        # global env keyed by Var; seed with consts + inputs
-        const_vars = list(closed.jaxpr.constvars)
+    @property
+    def plan(self):
+        return self._ex.plan
 
-        seg_fns = []
-        for seg in self.segments:
-            eqns = [flat[i] for i in seg]
-
-            # free inputs of the segment: vars read before defined inside
-            defined = set()
-            free = []
-            for eqn, invars in eqns:
-                for v in invars:
-                    base = v
-                    while isinstance(base, tuple):
-                        if base[0] == "const":
-                            base = None
-                            break
-                        base = base[1]
-                    if base is None or isinstance(base, jexc.Literal):
-                        continue
-                    if base not in defined and base not in free:
-                        free.append(base)
-                for ov in eqn.outvars:
-                    if not _is_drop(ov):
-                        defined.add(ov)
-            outs = [ov for eqn, _ in eqns for ov in eqn.outvars
-                    if not _is_drop(ov)]
-
-            def seg_fn(vals, _eqns=eqns, _free=free):
-                env = dict(zip(_free, vals))
-
-                def read(v):
-                    if isinstance(v, jexc.Literal):
-                        return v.val
-                    if isinstance(v, tuple):
-                        if v[0] == "const":
-                            return v[1]
-                        return read(v[1])
-                    return env[v]
-
-                results = []
-                for eqn, invars in _eqns:
-                    invals = [read(v) for v in invars]
-                    out = eqn.primitive.bind(*invals, **eqn.params)
-                    if not eqn.primitive.multiple_results:
-                        out = [out]
-                    for ov, o in zip(eqn.outvars, out):
-                        if not _is_drop(ov):
-                            env[ov] = o
-                            results.append(o)
-                return results
-
-            seg_fns.append((jax.jit(seg_fn), free, outs))
-        self._compiled = seg_fns
-        return seg_fns
+    @property
+    def segments(self) -> list:
+        return [list(s) for s in self._ex.plan.segments]
 
     def run(self, *args, measure: bool = False):
-        """Execute all segments; returns (outputs, host_times per segment)."""
-        trace = self.trace
-        closed = trace._closed
-        segs = self._compiled or self._build()
-        env = {}
-        for cv, cval in zip(closed.jaxpr.constvars, closed.consts):
-            env[cv] = cval
-        flat_args = jax.tree.leaves(args)
-        for iv, val in zip(closed.jaxpr.invars, flat_args):
-            env[iv] = val
-
-        host_times = []
-        for jfn, free, outs in segs:
-            vals = [env[v] if not isinstance(v, tuple) else v[1]
-                    for v in free]
-            t0 = time.perf_counter()
-            res = jfn(vals)
-            t1 = time.perf_counter()
-            if measure:
-                jax.block_until_ready(res)
-            host_times.append(t1 - t0)
-            for v, o in zip(outs, res):
-                env[v] = o
-
-        def read_out(v):
-            if isinstance(v, jexc.Literal):
-                return v.val
-            r = trace._env_map.get(v, v)
-            return _read(env, r)
-
-        outputs = [read_out(v) for v in closed.jaxpr.outvars]
-        return outputs, host_times
+        return self._ex.run(*args, measure=measure)
 
     def measure_host(self, *args, repeats: int = 3):
-        """Warm up (compile) then measure median per-segment dispatch time."""
-        self.run(*args)  # warmup/compile
-        all_times = []
-        for _ in range(repeats):
-            _, ts = self.run(*args, measure=False)
-            all_times.append(ts)
-        import statistics
-        med = [statistics.median(x) for x in zip(*all_times)]
-        if len(self.segments) == len(self.trace.kernels):
-            for k, t in zip(self.trace.kernels, med):
-                k.host_dispatch_s = t
-        return med
+        return self._ex.measure_host(*args, repeats=repeats)
 
     @property
     def n_launches(self) -> int:
-        return len(self.segments)
+        return self._ex.n_launches

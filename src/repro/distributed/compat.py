@@ -1,0 +1,39 @@
+"""Version compatibility shims for jax APIs that moved between releases.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to
+``jax.shard_map``, and its replication-check kwarg was renamed
+``check_rep`` -> ``check_vma`` along the way.  All repo code calls the
+wrapper below with the new-style name.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:
+    _shard_map = jax.shard_map                       # jax >= 0.5
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_CHECK_KW = ("check_vma" if "check_vma"
+             in inspect.signature(_shard_map).parameters else "check_rep")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    kwargs = {_CHECK_KW: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mesh axis, callable inside shard_map.
+
+    ``jax.lax.axis_size`` only exists in newer jax; older releases keep the
+    axis env reachable through the core module.  Both return a python int
+    usable in shapes (a ``psum(1, axis)`` fallback would be traced).
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    from jax._src.core import get_axis_env
+    return get_axis_env().axis_size(axis_name)

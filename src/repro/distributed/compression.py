@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import axis_size, shard_map
+
 
 def _quantize(x, err):
     xf = x.astype(jnp.float32) + err
@@ -28,7 +30,7 @@ def compressed_psum(grads, errors, axis: str):
 
     Call INSIDE shard_map.  Returns (mean grads f32, new error state).
     """
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
 
     def one(g, e):
         q, scale, new_e = _quantize(g, e)
@@ -67,7 +69,7 @@ def make_compressed_dp_grad(loss_fn, mesh, axis: str = "data"):
     def apply(params, errors, batch):
         rep = lambda t: jax.tree.map(lambda _: P(), t)
         bspec = jax.tree.map(lambda _: P(axis), batch)
-        return jax.shard_map(
+        return shard_map(
             shard_fn, mesh=mesh,
             in_specs=(rep(params), rep(errors), bspec),
             out_specs=(rep(params), rep(errors), P()),

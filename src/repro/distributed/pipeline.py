@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import shard_map
+
 
 def pipeline_forward(stage_fn: Callable, stage_params, x_micro, mesh,
                      axis: str = "pipe"):
@@ -55,7 +57,7 @@ def pipeline_forward(stage_fn: Callable, stage_params, x_micro, mesh,
         return ys[None]                                    # (1, ticks, ...)
 
     spec_p = jax.tree.map(lambda _: P(axis), stage_params)
-    fn = jax.shard_map(
+    fn = shard_map(
         per_device, mesh=mesh,
         in_specs=(spec_p, P()),
         out_specs=P(axis),

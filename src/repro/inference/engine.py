@@ -5,11 +5,18 @@ into a free slot (prompt lengths padded to power-of-two buckets to bound
 recompiles); every engine step decodes ALL active slots in one batched
 step with per-slot lengths; finished slots free immediately and are refilled
 from the queue — no head-of-line blocking on long generations.
+
+Execution plans: ``plan="jit"`` (default) runs prefill/decode as plain
+``jax.jit`` closures.  Any other strategy routes both through the
+launch-plan runtime (``repro.runtime``): the step function is traced once,
+a ``LaunchPlan`` is chosen (``eager`` / ``whole_graph`` / ``chain`` /
+cost-aware ``auto``), and each step executes the plan's compiled segments
+— so ``EngineStats`` can report real per-step dispatch counts and the
+modeled TKLQT of the serving hot path, the paper's serving-time story.
 """
 from __future__ import annotations
 
 import functools
-import itertools
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -19,6 +26,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import forward, make_cache
+
+PLAN_STRATEGIES = ("jit", "eager", "whole_graph", "chain", "auto")
 
 
 @dataclass
@@ -36,11 +45,73 @@ class EngineStats:
     decode_steps: int = 0
     tokens_out: int = 0
     slot_occupancy: list = field(default_factory=list)
+    plan: str = "jit"
+    prefill_dispatches: int = 0    # host dispatches (launches) in prefills
+    decode_dispatches: int = 0     # host dispatches across all decode steps
+    modeled_tklqt_s: float = 0.0   # device-model TKLQT summed over steps
+                                   # (0.0 under plan="jit": nothing modeled)
+
+    @property
+    def dispatches_per_decode_step(self) -> float:
+        return (self.decode_dispatches / self.decode_steps
+                if self.decode_steps else 0.0)
+
+
+class _PlannedFn:
+    """One engine callable routed through the launch-plan runtime.
+
+    Traced and planned lazily on first call (shapes are only known then);
+    afterwards every call executes the chosen plan's compiled segments,
+    which are shared process-wide via the runtime's segment cache.
+    """
+
+    def __init__(self, fn, strategy: str, platform: str,
+                 lengths=(2, 4, 8, 16, 32)):
+        self.fn = fn
+        self.strategy = strategy
+        self.platform = platform
+        self.lengths = lengths
+        self.executor = None
+        self.modeled_tklqt_s = 0.0      # modeled TKLQT of ONE invocation
+
+    def _build(self, *args):
+        from repro.core.tracing import trace_fn
+        from repro.runtime import LaunchPlan, PlanExecutor, Planner
+        trace = trace_fn(self.fn, *args)
+        planner = Planner(trace, self.platform)
+        n = len(trace.kernels)
+        if self.strategy == "eager":
+            plan = LaunchPlan.eager(n)
+        elif self.strategy == "whole_graph":
+            plan = LaunchPlan.whole_graph(n)
+        elif self.strategy == "chain":
+            plan = planner.compare(
+                [planner.chain(L) for L in self.lengths])[0].plan
+        elif self.strategy == "auto":
+            plan = planner.auto(lengths=self.lengths).plan
+        else:
+            raise ValueError(f"unknown plan strategy {self.strategy!r}; "
+                             f"expected one of {PLAN_STRATEGIES}")
+        self.executor = PlanExecutor(trace, plan)
+        self.modeled_tklqt_s = planner.evaluate(plan).tklqt
+
+    def __call__(self, *args):
+        if self.executor is None:
+            self._build(*args)
+        return self.executor.call(*args)
+
+    @property
+    def n_launches(self) -> int:
+        return self.executor.n_launches if self.executor else 0
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
-                 max_len: int = 256, greedy: bool = True):
+                 max_len: int = 256, greedy: bool = True,
+                 plan: str = "jit", platform: str = "TPU-v5e"):
+        if plan not in PLAN_STRATEGIES:
+            raise ValueError(f"unknown plan {plan!r}; "
+                             f"expected one of {PLAN_STRATEGIES}")
         self.cfg = cfg
         self.params = params
         self.B = max_batch
@@ -49,11 +120,14 @@ class ServeEngine:
                                 dtype=cfg.cdtype)
         self.lengths = np.zeros(max_batch, np.int32)
         self.slots: list[Optional[Request]] = [None] * max_batch
-        self.stats = EngineStats()
+        self.stats = EngineStats(plan=plan)
         self.greedy = greedy
+        self.plan = plan
+        self.platform = platform
+        self._planned_prefill: dict = {}    # (bucket, plen) -> _PlannedFn
+        self._planned_decode: Optional[_PlannedFn] = None
 
-        @functools.partial(jax.jit, static_argnames=("plen",))
-        def prefill_one(params, cache, tokens, slot, plen):
+        def prefill_body(params, cache, tokens, slot, plen, unroll=False):
             # tokens: (1, plen_padded); writes slot's KV rows.  The slot's
             # sub-cache is ZEROED first — recurrent states (rwkv/mamba) from
             # a previous occupant must not leak into the new request.
@@ -62,20 +136,24 @@ class ServeEngine:
                     jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1)),
                 cache)
             logits, _, sub2 = forward(params, tokens, cfg, cache=sub,
-                                      cache_index=jnp.zeros((), jnp.int32))
+                                      cache_index=jnp.zeros((), jnp.int32),
+                                      unroll=unroll)
             cache2 = jax.tree.map(
                 lambda c, s_: jax.lax.dynamic_update_slice_in_dim(
                     c, s_.astype(c.dtype), slot, axis=1), cache, sub2)
             return logits[:, plen - 1], cache2
 
-        @jax.jit
-        def decode_all(params, cache, tokens, lengths):
+        def decode_body(params, cache, tokens, lengths, unroll=False):
             logits, _, cache2 = forward(params, tokens, cfg, cache=cache,
-                                        lengths=lengths)
+                                        lengths=lengths, unroll=unroll)
             return logits[:, 0], cache2
 
-        self._prefill = prefill_one
-        self._decode = decode_all
+        self._prefill = jax.jit(prefill_body, static_argnames=("plen",))
+        self._decode = jax.jit(decode_body)
+        # planned modes trace with unroll=True: the unrolled layer stack
+        # gives the periodic kernel stream proximity mining feeds on
+        self._prefill_body = prefill_body
+        self._decode_body = decode_body
 
     # ------------------------------------------------------------ internals
     @staticmethod
@@ -100,8 +178,22 @@ class ServeEngine:
         bucket = self._bucket(plen)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :plen] = req.prompt
-        logits, self.cache = self._prefill(
-            self.params, self.cache, jnp.asarray(toks), slot, plen)
+        if self.plan == "jit":
+            logits, self.cache = self._prefill(
+                self.params, self.cache, jnp.asarray(toks), slot, plen)
+            self.stats.prefill_dispatches += 1
+        else:
+            pf = self._planned_prefill.get((bucket, plen))
+            if pf is None:
+                fn = functools.partial(self._prefill_body, plen=plen,
+                                       unroll=True)
+                pf = _PlannedFn(fn, self.plan, self.platform)
+                self._planned_prefill[(bucket, plen)] = pf
+            logits, self.cache = pf(self.params, self.cache,
+                                    jnp.asarray(toks),
+                                    jnp.asarray(slot, jnp.int32))
+            self.stats.prefill_dispatches += pf.n_launches
+            self.stats.modeled_tklqt_s += pf.modeled_tklqt_s
         first = self._sample(logits[0])
         req.generated.append(first)
         self.slots[slot] = req
@@ -118,9 +210,22 @@ class ServeEngine:
         toks = np.zeros((self.B, 1), np.int32)
         for i in active:
             toks[i, 0] = self.slots[i].generated[-1]
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(toks),
-            jnp.asarray(self.lengths))
+        if self.plan == "jit":
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(self.lengths))
+            self.stats.decode_dispatches += 1
+        else:
+            if self._planned_decode is None:
+                self._planned_decode = _PlannedFn(
+                    functools.partial(self._decode_body, unroll=True),
+                    self.plan, self.platform)
+            logits, self.cache = self._planned_decode(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(self.lengths))
+            self.stats.decode_dispatches += self._planned_decode.n_launches
+            self.stats.modeled_tklqt_s += \
+                self._planned_decode.modeled_tklqt_s
         self.stats.decode_steps += 1
         self.stats.slot_occupancy.append(len(active))
         logits_np = np.asarray(logits)

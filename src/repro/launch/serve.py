@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
         --requests 8 --max-batch 4
+
+Pick an execution plan with ``--plan``: the default ``jit`` serves via
+whole-step jax.jit closures; ``eager`` / ``chain`` / ``auto`` /
+``whole_graph`` route prefill/decode through the launch-plan runtime and
+report real per-step dispatch counts plus modeled TKLQT for ``--platform``.
 """
 from __future__ import annotations
 
@@ -12,8 +17,9 @@ import time
 import jax
 import numpy as np
 
+from repro.core.device_model import PLATFORMS
+from repro.inference.engine import PLAN_STRATEGIES, Request, ServeEngine
 from repro.configs import get_config, reduced
-from repro.inference.engine import Request, ServeEngine
 from repro.models import init_params
 
 
@@ -25,6 +31,9 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--plan", default="jit", choices=PLAN_STRATEGIES)
+    ap.add_argument("--platform", default="TPU-v5e",
+                    choices=sorted(PLATFORMS))
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -32,7 +41,8 @@ def main():
         cfg = reduced(cfg)
     params = init_params(jax.random.PRNGKey(0), cfg)
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
-                      max_len=args.max_len)
+                      max_len=args.max_len, plan=args.plan,
+                      platform=args.platform)
     rng = np.random.default_rng(0)
     reqs = [Request(i, prompt=list(rng.integers(0, cfg.vocab_size, 12)),
                     max_new_tokens=args.max_new)
@@ -40,12 +50,19 @@ def main():
     t0 = time.time()
     done = eng.run(reqs)
     dt = time.time() - t0
+    st = eng.stats
     print(json.dumps({
         "arch": cfg.name, "requests": len(done),
-        "tokens_out": eng.stats.tokens_out,
-        "decode_steps": eng.stats.decode_steps,
-        "mean_occupancy": round(float(np.mean(eng.stats.slot_occupancy)), 2),
-        "tok_per_s": round(eng.stats.tokens_out / dt, 1),
+        "plan": st.plan,
+        "tokens_out": st.tokens_out,
+        "decode_steps": st.decode_steps,
+        "decode_dispatches": st.decode_dispatches,
+        "dispatches_per_decode_step": round(
+            st.dispatches_per_decode_step, 2),
+        "prefill_dispatches": st.prefill_dispatches,
+        "modeled_tklqt_us": round(st.modeled_tklqt_s * 1e6, 1),
+        "mean_occupancy": round(float(np.mean(st.slot_occupancy)), 2),
+        "tok_per_s": round(st.tokens_out / dt, 1),
     }))
 
 

@@ -1,0 +1,14 @@
+"""Unified launch-plan runtime: one plan -> compile -> execute subsystem.
+
+Everything that turns a flattened kernel trace into dispatched work flows
+through here: ``LaunchPlan`` partitions the trace, ``Planner`` picks
+boundaries analytically against the TKLQT device model, ``PlanExecutor``
+compiles each segment once (process-wide cache) and runs it.  The legacy
+entry points — ``core.tracing.Executor``, ``core.fusion.apply_fusion``,
+``core.skip.SKIP`` — are thin facades over these types.
+"""
+from repro.runtime.executor import (PlanExecutor, cache_stats,  # noqa: F401
+                                    clear_cache)
+from repro.runtime.plan import LaunchPlan                       # noqa: F401
+from repro.runtime.planner import (PlanChoice, PlanEvaluation,  # noqa: F401
+                                   Planner, simulate_plan)

@@ -1,0 +1,40 @@
+"""Optional-dependency shim for hypothesis (dev-only dependency).
+
+Property tests use hypothesis when it is installed; without it they are
+skipped at runtime while every deterministic test in the same module still
+collects and runs.  Test modules import ``given``/``settings``/``st`` from
+here instead of from hypothesis directly.
+
+Install the real thing with: ``pip install hypothesis``.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Accepts any strategy-building call chain; values never used."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+    def given(*_a, **_k):
+        # replace the property test with a zero-arg skipper so pytest
+        # never tries to resolve the strategy params as fixtures
+        def deco(fn):
+            def _skipped():
+                pytest.skip("hypothesis not installed (optional dev dep)")
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco
+
+    def settings(*_a, **_k):
+        def deco(fn):
+            return fn
+        return deco

@@ -18,6 +18,11 @@ from repro.launch.mesh import make_host_mesh
 
 
 def _run_sub(code: str, devices: int = 8) -> str:
+    # forcing a host-platform device count only works on the CPU backend;
+    # on an accelerator backend we need that many real devices
+    if jax.default_backend() != "cpu" and jax.device_count() < devices:
+        pytest.skip(f"needs {devices} devices, have {jax.device_count()} "
+                    f"on backend {jax.default_backend()!r}")
     env = {"XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
            "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu", "PATH": "/usr/bin:/bin"}
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],

@@ -7,6 +7,7 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.device_model import PLATFORMS, simulate
 from repro.core.export import to_chrome_trace
@@ -16,6 +17,11 @@ from repro.inference.kv_quant import (
 
 
 def _run_sub(code: str, devices: int = 4) -> str:
+    # forcing a host-platform device count only works on the CPU backend;
+    # on an accelerator backend we need that many real devices
+    if jax.default_backend() != "cpu" and jax.device_count() < devices:
+        pytest.skip(f"needs {devices} devices, have {jax.device_count()} "
+                    f"on backend {jax.default_backend()!r}")
     env = {"XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
            "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu", "PATH": "/usr/bin:/bin"}
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],

@@ -3,7 +3,7 @@ forms, boundedness inflection, proximity mining (Eqs. 6-8), chain-jit."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.boundedness import find_inflection
 from repro.core.device_model import PLATFORMS, PlatformSpec, simulate
@@ -36,7 +36,7 @@ def test_trace_and_eager_execution_match():
                                np.asarray(_toy_fn(*args)), atol=1e-6)
 
 
-def test_fused_segments_bit_identical():
+def test_fused_segments_match_eager():
     args = _toy_args()
     tr = trace_fn(_toy_fn, *args)
     n = len(tr.kernels)
@@ -45,8 +45,14 @@ def test_fused_segments_bit_identical():
                  [list(range(n))],
                  [list(range(n // 2)), list(range(n // 2, n))]):
         out, _ = Executor(tr, segments=segs).run(*args)
-        np.testing.assert_array_equal(np.asarray(out[-1]),
-                                      np.asarray(eager[-1]))
+        if len(segs) == n:
+            # per-eqn segments dispatch the same executables: bit-identical
+            np.testing.assert_array_equal(np.asarray(out[-1]),
+                                          np.asarray(eager[-1]))
+        else:
+            # XLA may fuse within a multi-eqn segment and change rounding
+            np.testing.assert_allclose(np.asarray(out[-1]),
+                                       np.asarray(eager[-1]), atol=1e-6)
 
 
 def test_nested_jit_inlined():

@@ -1,0 +1,177 @@
+"""Launch-plan runtime: plan validity, equivalence across strategies,
+the cost-aware auto partitioner, the compiled-segment cache, and the
+serving engine's plan-aware dispatch accounting."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.fusion import _speedup
+from repro.core.proximity import fusion_segments, mine_chains
+from repro.core.tracing import trace_fn
+from repro.inference.engine import Request, ServeEngine
+from repro.models import forward, init_params
+from repro.runtime import (LaunchPlan, PlanExecutor, Planner, cache_stats,
+                           clear_cache)
+
+
+def _toy_fn(x, w1, w2):
+    h = jax.nn.gelu(x @ w1)
+    h = h * 2 + 1
+    return jax.nn.softmax(h @ w2, axis=-1)
+
+
+def _toy_args():
+    key = jax.random.PRNGKey(0)
+    return (jax.random.normal(key, (4, 8)),
+            jax.random.normal(key, (8, 16)),
+            jax.random.normal(key, (16, 8)))
+
+
+# ------------------------------------------------------------ plan shapes
+def test_plan_builders_cover_exactly():
+    tr = trace_fn(_toy_fn, *_toy_args())
+    n = len(tr.kernels)
+    for plan in (LaunchPlan.eager(n), LaunchPlan.whole_graph(n),
+                 LaunchPlan.chain(tr.kernel_names, 4)):
+        plan.validate(n)
+        assert plan.n_kernels == n
+    assert LaunchPlan.eager(n).n_launches == n
+    assert LaunchPlan.whole_graph(n).n_launches == 1
+
+
+def test_plan_rejects_bad_cover():
+    with pytest.raises(ValueError):
+        LaunchPlan.from_segments([[0, 2], [1]])
+    with pytest.raises(ValueError):
+        LaunchPlan.from_segments([[0], [1]]).validate(3)
+
+
+# ------------------------------------------------------------ equivalence
+def test_plans_equivalent_on_toy_fn():
+    args = _toy_args()
+    tr = trace_fn(_toy_fn, *args)
+    n = len(tr.kernels)
+    eager, _ = PlanExecutor(tr, LaunchPlan.eager(n)).run(*args)
+    planner = Planner(tr, "GH200")
+    for plan in (LaunchPlan.whole_graph(n),
+                 LaunchPlan.chain(tr.kernel_names, 4),
+                 planner.cost_partition(),
+                 planner.auto().plan):
+        out, _ = PlanExecutor(tr, plan).run(*args)
+        np.testing.assert_allclose(np.asarray(out[-1]),
+                                   np.asarray(eager[-1]), atol=1e-6)
+
+
+def test_plans_equivalent_on_reduced_smollm():
+    cfg = reduced(get_config("smollm-360m"), n_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0,
+                                cfg.vocab_size)
+
+    def fwd(p, t):
+        return forward(p, t, cfg, unroll=True)[0]
+
+    tr = trace_fn(fwd, params, tokens)
+    n = len(tr.kernels)
+    eager, _ = PlanExecutor(tr, LaunchPlan.eager(n)).run(params, tokens)
+    auto = Planner(tr, "GH200").auto().plan
+    assert auto.n_launches < n
+    out, _ = PlanExecutor(tr, auto).run(params, tokens)
+    np.testing.assert_allclose(np.asarray(out[-1], np.float32),
+                               np.asarray(eager[-1], np.float32), atol=1e-4)
+
+
+# ------------------------------------------------------------ planner
+def test_auto_plan_beats_fixed_chains_on_paper_workload():
+    """Acceptance: modeled TKLQT of the auto plan <= best chain(L),
+    L in {2,4,8,16}, on a paper workload (gpt2, Table III)."""
+    cfg = reduced(get_config("gpt2"), n_layers=4)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 32), 0,
+                                cfg.vocab_size)
+
+    def fwd(p, t):
+        return forward(p, t, cfg, unroll=True)[0]
+
+    tr = trace_fn(fwd, params, tokens)
+    for platform in ("GH200", "Intel+H100"):
+        planner = Planner(tr, platform)
+        choice = planner.auto(lengths=(2, 4, 8, 16))
+        chain_best = min(planner.evaluate(planner.chain(L)).tklqt
+                         for L in (2, 4, 8, 16))
+        assert choice.report.tklqt <= chain_best + 1e-15
+        assert choice.report.tklqt < planner.evaluate(planner.eager()).tklqt
+
+
+def test_cost_partition_isolates_device_bound_kernels():
+    tr = trace_fn(_toy_fn, *_toy_args())
+    planner = Planner(tr, "GH200")
+    plan = planner.cost_partition(max_segment=4)
+    plan.validate(len(tr.kernels))
+    assert plan.max_segment <= 4
+
+
+# ------------------------------------------------------------ segment cache
+def test_segment_cache_hits_across_executors():
+    args = _toy_args()
+    tr = trace_fn(_toy_fn, *args)
+    n = len(tr.kernels)
+    clear_cache()
+    ex1 = PlanExecutor(tr, LaunchPlan.whole_graph(n))
+    ex1.run(*args)
+    assert cache_stats() == {"hits": 0, "misses": 1}
+    ex2 = PlanExecutor(tr, LaunchPlan.whole_graph(n))
+    ex2.run(*args)
+    assert cache_stats() == {"hits": 1, "misses": 1}
+    # a different plan over the same trace is a distinct entry
+    PlanExecutor(tr, LaunchPlan.eager(n)).run(*args)
+    assert cache_stats()["misses"] == 2
+    # a fresh trace of the same fn never aliases (unique trace token)
+    tr2 = trace_fn(_toy_fn, *args)
+    PlanExecutor(tr2, LaunchPlan.whole_graph(n)).run(*args)
+    assert cache_stats()["misses"] == 3
+
+
+# ------------------------------------------------------------ degenerate
+def test_mine_chains_shorter_than_length():
+    res = mine_chains(["a", "b", "c"], 8)
+    assert res.k_fused == res.k_eager == 3
+    assert res.speedup == 1.0 and res.candidates == []
+    assert mine_chains([], 4).speedup == 1.0
+    segs = fusion_segments(["a", "b", "c"], 8)
+    assert segs == [[0], [1], [2]]
+
+
+def test_measured_speedup_guards():
+    assert _speedup(1.0, 0.5) == 2.0
+    assert _speedup(1.0, 0.0) == float("inf")
+    assert math.isnan(_speedup(0.0, 0.0))
+
+
+# ------------------------------------------------------------ serve engine
+def test_engine_chain_plan_fewer_dispatches_same_tokens():
+    """Acceptance: plan='chain' decodes with strictly fewer dispatches per
+    step than plan='eager' while generating identical tokens."""
+    cfg = reduced(get_config("smollm-360m"), n_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    def run(plan):
+        eng = ServeEngine(cfg, params, max_batch=2, max_len=64, plan=plan)
+        done = eng.run([Request(0, prompt=list(range(7, 17)),
+                                max_new_tokens=4)])
+        return [r.generated for r in done], eng.stats
+
+    toks_jit, s_jit = run("jit")
+    toks_eager, s_eager = run("eager")
+    toks_chain, s_chain = run("chain")
+    assert toks_jit == toks_eager == toks_chain
+    assert s_chain.dispatches_per_decode_step \
+        < s_eager.dispatches_per_decode_step
+    assert s_jit.dispatches_per_decode_step == 1.0
+    assert s_chain.decode_steps == s_eager.decode_steps
+    assert s_chain.modeled_tklqt_s < s_eager.modeled_tklqt_s
+    assert s_chain.plan == "chain" and s_chain.prefill_dispatches > 0

@@ -1,0 +1,44 @@
+"""Measured serving characterization: scenario x batch sweep of the live
+engine with telemetry — serving percentiles (TTFT/ITL/E2E), measured
+launch tax per step, and the measured boundedness classification.  This
+is the measured companion of ``tklqt_sweep`` (which models the curve)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import FAST, csv_row
+from repro.configs import get_config, reduced
+from repro.models import init_params
+from repro.telemetry.characterize import characterize
+
+ARCH = "smollm-360m"
+SCENARIOS = ("chatbot",) if FAST else ("chatbot", "agentic")
+BATCHES = (1, 2) if FAST else (1, 2, 4)
+N_REQUESTS = 3 if FAST else 6
+
+
+def run() -> list[str]:
+    cfg = reduced(get_config(ARCH), n_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rows = []
+    for scenario in SCENARIOS:
+        res = characterize(cfg, params, scenario=scenario, batches=BATCHES,
+                           plan="chain", n_requests=N_REQUESTS, seed=0,
+                           max_len=128, prompt_cap=16, output_cap=4)
+        for p in res.points:
+            r = p.row()
+            rows.append(csv_row(
+                f"characterize/{scenario}/b{p.batch}",
+                r["decode_launch_tax_us"],
+                f"class={res.boundedness.classify(p.batch)};"
+                f"step_us={r['mean_decode_step_us']};"
+                f"ttft_p50_ms={r['ttft_p50_ms']};"
+                f"ttft_p99_ms={r['ttft_p99_ms']};"
+                f"itl_p50_ms={r['itl_p50_ms']};"
+                f"itl_p99_ms={r['itl_p99_ms']};"
+                f"e2e_p99_ms={r['e2e_p99_ms']};"
+                f"tok_per_s={r['tokens_per_s']}"))
+        rows.append(csv_row(
+            f"characterize/{scenario}/inflection", 0.0,
+            f"inflection_batch={res.boundedness.inflection_batch}"))
+    return rows

@@ -27,6 +27,7 @@ BENCHES = [
     ("ps_vs_graph", "benchmarks.bench_ps_vs_graph"),      # Fig 9
     ("platform_sweep", "benchmarks.bench_platform_sweep"),  # Figs 10/11
     ("roofline", "benchmarks.bench_roofline"),            # beyond paper
+    ("characterize", "benchmarks.bench_characterize"),    # measured serving
 ]
 
 

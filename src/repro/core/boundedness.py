@@ -32,12 +32,23 @@ class BoundednessResult:
         return (self.batches[0], self.inflection_batch)
 
 
+_BASE_EPS = 1e-12      # below this the flat (launch) level is not established
+
+
 def find_inflection(batches: Sequence[int], tklqt: Sequence[float],
                     factor: float = INFLECTION_FACTOR):
-    """First batch where TKLQT rises above factor x the flat (launch) level."""
-    if not batches:
+    """First batch where TKLQT rises above factor x the flat (launch) level.
+
+    Degenerate inputs return None (no inflection) rather than a spurious
+    one: a zero/near-zero base level would let ANY positive value trip
+    ``t > factor * base``, and mismatched sequence lengths mean the input
+    is not a curve at all.
+    """
+    if not batches or len(batches) != len(tklqt):
         return None
     base = tklqt[0]
+    if not (base > _BASE_EPS):        # zero, near-zero, negative, or NaN
+        return None
     for b, t in zip(batches, tklqt):
         if t > factor * base:
             return b

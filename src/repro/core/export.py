@@ -42,3 +42,70 @@ def save_chrome_trace(events, platform: str, path: str) -> str:
     with open(path, "w") as f:
         json.dump(to_chrome_trace(events, platform), f)
     return path
+
+
+# --------------------------------------------------------------- measured
+def spans_to_chrome_events(spans, pid: int = 0) -> list:
+    """Telemetry spans (repro.telemetry.spans.Span) -> chrome trace events."""
+    out = []
+    for s in spans:
+        ev = {
+            "name": s.name, "ph": "X", "pid": pid, "tid": s.tid,
+            "ts": s.t0 * 1e6, "dur": max(s.dur * 1e6, 0.01),
+            "cat": s.cat,
+        }
+        if s.args:
+            ev["args"] = dict(s.args)
+        out.append(ev)
+    return out
+
+
+def merged_chrome_trace(spans, platform: str,
+                        device_events: Sequence[KernelEvent] = (),
+                        device_anchors: Sequence[float] = (),
+                        device_tid: int = 2,
+                        metadata: dict | None = None) -> dict:
+    """Merged timeline: MEASURED host spans + MODELED device kernels.
+
+    ``device_events`` is one modeled invocation (e.g. the planner's
+    simulated decode step); it is replicated at each ``device_anchors``
+    offset (seconds) — typically the measured start of every decode step —
+    so the modeled device lane lines up under the real host lane.
+    """
+    out = spans_to_chrome_events(spans)
+    for anchor in device_anchors:
+        for e in device_events:
+            out.append({
+                "name": e.name, "ph": "X", "pid": 0, "tid": device_tid,
+                "ts": (anchor + e.kernel_start) * 1e6,
+                "dur": max(e.duration * 1e6, 0.01),
+                "cat": "modeled_kernel",
+                "args": {"t_l_us": e.t_l * 1e6},
+            })
+    meta = {"platform": platform}
+    if metadata:
+        meta.update(metadata)
+    return {
+        "traceEvents": out,
+        "displayTimeUnit": "ms",
+        "metadata": meta,
+        "otherData": {
+            "thread_names": {
+                "0": "CPU host (engine steps)",
+                "1": "CPU host (segment dispatches)",
+                str(device_tid): f"{platform} stream 0 (modeled)",
+            },
+        },
+    }
+
+
+def save_merged_trace(spans, platform: str, path: str, *,
+                      device_events: Sequence[KernelEvent] = (),
+                      device_anchors: Sequence[float] = (),
+                      metadata: dict | None = None) -> str:
+    with open(path, "w") as f:
+        json.dump(merged_chrome_trace(spans, platform,
+                                      device_events=device_events,
+                                      device_anchors=device_anchors,
+                                      metadata=metadata), f)
+    return path

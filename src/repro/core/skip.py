@@ -17,6 +17,9 @@ Typical use:
     outcome = skip.fuse(length=16)           # chain plan: fuse + measure
     choice = skip.plan("GH200")              # cost-aware auto LaunchPlan
     ex = skip.executor(choice.plan)          # compiled-segment executor
+
+    res = SKIP.characterize(cfg, params,     # MEASURED serving sweep:
+        scenario="chatbot", batches=(1,2,4)) # scenario x batch telemetry
 """
 from __future__ import annotations
 
@@ -109,6 +112,19 @@ class SKIP:
     def executor(self, plan: Optional["LaunchPlan"] = None) -> "PlanExecutor":
         from repro.runtime import PlanExecutor
         return PlanExecutor(self.trace_, plan)
+
+    # ------------------------------------------------------------ measured
+    @staticmethod
+    def characterize(cfg, params, **kw):
+        """Measured serving characterization: drive the live ServeEngine
+        with a named traffic scenario, sweep batch sizes, aggregate
+        TTFT/ITL/E2E percentiles and measured launch tax, and classify the
+        CPU/GPU-bound inflection from the measured curve.  Thin facade
+        over ``repro.telemetry.characterize.characterize`` (same kwargs:
+        scenario, batches, plan, platform, n_requests, seed, workload...).
+        """
+        from repro.telemetry.characterize import characterize
+        return characterize(cfg, params, **kw)
 
     # ------------------------------------------------------------ fusion
     def recommend(self, length: int = 8, threshold: float = 1.0):

@@ -17,6 +17,8 @@ modeled TKLQT of the serving hot path, the paper's serving-time story.
 from __future__ import annotations
 
 import functools
+import math
+import time
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -26,6 +28,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import forward, make_cache
+from repro.telemetry.metrics import RequestTiming
 
 PLAN_STRATEGIES = ("jit", "eager", "whole_graph", "chain", "auto")
 
@@ -35,6 +38,7 @@ class Request:
     rid: int
     prompt: list
     max_new_tokens: int = 16
+    arrival_s: float = 0.0         # offset on the engine clock (open loop)
     generated: list = field(default_factory=list)
     done: bool = False
 
@@ -50,10 +54,53 @@ class EngineStats:
     decode_dispatches: int = 0     # host dispatches across all decode steps
     modeled_tklqt_s: float = 0.0   # device-model TKLQT summed over steps
                                    # (0.0 under plan="jit": nothing modeled)
+    measured_dispatch_s: float = 0.0  # measured host launch tax (all steps)
+    decode_dispatch_time_s: float = 0.0  # measured launch tax, decode only
+    step_times_s: list = field(default_factory=list)  # decode step durations
+    # single source of truth for per-request latency: rid -> RequestTiming
+    # (ttft_s/e2e_s/itl_samples_s below are derived views)
+    timings: dict = field(default_factory=dict)
 
     @property
     def dispatches_per_decode_step(self) -> float:
         return (self.decode_dispatches / self.decode_steps
+                if self.decode_steps else 0.0)
+
+    @property
+    def ttft_s(self) -> dict:
+        return {rid: t.ttft_s for rid, t in self.timings.items()
+                if not math.isnan(t.first_token_s)}
+
+    @property
+    def e2e_s(self) -> dict:
+        return {rid: t.e2e_s for rid, t in self.timings.items()
+                if not math.isnan(t.done_s)}
+
+    @property
+    def itl_samples_s(self) -> list:
+        return [g for t in self.timings.values() for g in t.itl_s]
+
+    @property
+    def mean_ttft_s(self) -> float:
+        ttft = self.ttft_s
+        return sum(ttft.values()) / len(ttft) if ttft else 0.0
+
+    @property
+    def mean_itl_s(self) -> float:
+        itl = self.itl_samples_s
+        return sum(itl) / len(itl) if itl else 0.0
+
+    @property
+    def launch_tax_per_step_s(self) -> float:
+        """Measured host dispatch time per engine step (prefill+decode)."""
+        steps = self.prefills + self.decode_steps
+        return self.measured_dispatch_s / steps if steps else 0.0
+
+    @property
+    def launch_tax_per_decode_step_s(self) -> float:
+        """Decode-only launch tax per decode step — comparable against the
+        mean decode-step latency (the measured boundedness denominator)."""
+        return (self.decode_dispatch_time_s / self.decode_steps
                 if self.decode_steps else 0.0)
 
 
@@ -73,6 +120,8 @@ class _PlannedFn:
         self.lengths = lengths
         self.executor = None
         self.modeled_tklqt_s = 0.0      # modeled TKLQT of ONE invocation
+        self.modeled_events = []        # simulated device timeline, one call
+        self.last_host_times = []       # measured per-segment dispatch, last call
 
     def _build(self, *args):
         from repro.core.tracing import trace_fn
@@ -94,11 +143,17 @@ class _PlannedFn:
                              f"expected one of {PLAN_STRATEGIES}")
         self.executor = PlanExecutor(trace, plan)
         self.modeled_tklqt_s = planner.evaluate(plan).tklqt
+        from repro.runtime.planner import simulate_plan
+        self.modeled_events = simulate_plan(trace.kernels, plan, planner.spec)
+        from repro.runtime.plan import segment_label
+        self.segment_names = [segment_label(trace.kernels, s)
+                              for s in plan.segments]
 
     def __call__(self, *args):
         if self.executor is None:
             self._build(*args)
-        return self.executor.call(*args)
+        out, self.last_host_times = self.executor.call_timed(*args)
+        return out
 
     @property
     def n_launches(self) -> int:
@@ -108,10 +163,14 @@ class _PlannedFn:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  max_len: int = 256, greedy: bool = True,
-                 plan: str = "jit", platform: str = "TPU-v5e"):
+                 plan: str = "jit", platform: str = "TPU-v5e",
+                 telemetry=None):
         if plan not in PLAN_STRATEGIES:
             raise ValueError(f"unknown plan {plan!r}; "
                              f"expected one of {PLAN_STRATEGIES}")
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch} "
+                             f"(an engine with no slots can never admit)")
         self.cfg = cfg
         self.params = params
         self.B = max_batch
@@ -124,6 +183,11 @@ class ServeEngine:
         self.greedy = greedy
         self.plan = plan
         self.platform = platform
+        self.telemetry = telemetry          # Optional[SpanRecorder]
+        # virtual serving clock (seconds): advances by measured wall time
+        # while the engine works, jumps forward over idle gaps so open-loop
+        # arrival schedules don't cost real wall time to honor
+        self.now = 0.0
         self._planned_prefill: dict = {}    # (bucket, plen) -> _PlannedFn
         self._planned_decode: Optional[_PlannedFn] = None
 
@@ -156,6 +220,11 @@ class ServeEngine:
         self._decode_body = decode_body
 
     # ------------------------------------------------------------ internals
+    @property
+    def timings(self) -> dict:
+        """Per-request RequestTiming objects (lives on stats)."""
+        return self.stats.timings
+
     @staticmethod
     def _bucket(n: int) -> int:
         return max(8, 1 << (n - 1).bit_length())
@@ -169,6 +238,17 @@ class ServeEngine:
     def _sample(self, logits_row) -> int:
         return int(jnp.argmax(logits_row))
 
+    def _record_segments(self, pf: _PlannedFn, t_begin: float) -> None:
+        """Per-segment dispatch spans on the engine clock: the measured
+        host times of the last planned call, laid out back-to-back from
+        the step's start (tid 1 of the merged Chrome trace)."""
+        if self.telemetry is None or not self.telemetry.enabled:
+            return
+        t = t_begin
+        for name, h in zip(pf.segment_names, pf.last_host_times):
+            self.telemetry.add(name, "dispatch", t, t + h, tid=1)
+            t += h
+
     # ------------------------------------------------------------ api
     def admit(self, req: Request) -> bool:
         slot = self._free_slot()
@@ -178,10 +258,12 @@ class ServeEngine:
         bucket = self._bucket(plen)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :plen] = req.prompt
+        t0 = time.perf_counter()
         if self.plan == "jit":
             logits, self.cache = self._prefill(
                 self.params, self.cache, jnp.asarray(toks), slot, plen)
             self.stats.prefill_dispatches += 1
+            self.stats.measured_dispatch_s += time.perf_counter() - t0
         else:
             pf = self._planned_prefill.get((bucket, plen))
             if pf is None:
@@ -194,12 +276,31 @@ class ServeEngine:
                                     jnp.asarray(slot, jnp.int32))
             self.stats.prefill_dispatches += pf.n_launches
             self.stats.modeled_tklqt_s += pf.modeled_tklqt_s
+            self.stats.measured_dispatch_s += sum(pf.last_host_times)
         first = self._sample(logits[0])
+        dt = time.perf_counter() - t0
+        t_begin = self.now
+        self.now += dt
         req.generated.append(first)
-        self.slots[slot] = req
-        self.lengths[slot] = plen
         self.stats.prefills += 1
         self.stats.tokens_out += 1
+        timing = RequestTiming(req.rid, arrival_s=req.arrival_s,
+                               first_token_s=self.now)
+        timing.token_times_s.append(self.now)
+        self.timings[req.rid] = timing
+        if len(req.generated) >= req.max_new_tokens:
+            # single-token budget: done at prefill, never occupies a slot
+            req.done = True
+            timing.done_s = self.now
+        else:
+            self.slots[slot] = req
+            self.lengths[slot] = plen
+        if self.telemetry is not None:
+            self.telemetry.add(f"prefill[{plen}]", "prefill", t_begin,
+                               self.now, rid=req.rid, slot=slot, plen=plen)
+            if self.plan != "jit":
+                self._record_segments(
+                    self._planned_prefill[(bucket, plen)], t_begin)
         return True
 
     def step(self):
@@ -210,11 +311,15 @@ class ServeEngine:
         toks = np.zeros((self.B, 1), np.int32)
         for i in active:
             toks[i, 0] = self.slots[i].generated[-1]
+        t0 = time.perf_counter()
         if self.plan == "jit":
             logits, self.cache = self._decode(
                 self.params, self.cache, jnp.asarray(toks),
                 jnp.asarray(self.lengths))
             self.stats.decode_dispatches += 1
+            disp = time.perf_counter() - t0
+            self.stats.measured_dispatch_s += disp
+            self.stats.decode_dispatch_time_s += disp
         else:
             if self._planned_decode is None:
                 self._planned_decode = _PlannedFn(
@@ -226,27 +331,54 @@ class ServeEngine:
             self.stats.decode_dispatches += self._planned_decode.n_launches
             self.stats.modeled_tklqt_s += \
                 self._planned_decode.modeled_tklqt_s
+            disp = sum(self._planned_decode.last_host_times)
+            self.stats.measured_dispatch_s += disp
+            self.stats.decode_dispatch_time_s += disp
         self.stats.decode_steps += 1
         self.stats.slot_occupancy.append(len(active))
         logits_np = np.asarray(logits)
+        dt = time.perf_counter() - t0
+        t_begin = self.now
+        self.now += dt
+        self.stats.step_times_s.append(dt)
+        if self.telemetry is not None:
+            self.telemetry.add(f"decode[b={len(active)}]", "decode",
+                               t_begin, self.now, batch=len(active))
+            if self.plan != "jit":
+                self._record_segments(self._planned_decode, t_begin)
         for i in active:
             req = self.slots[i]
             self.lengths[i] += 1
             nxt = int(np.argmax(logits_np[i]))
             req.generated.append(nxt)
             self.stats.tokens_out += 1
+            timing = self.timings.get(req.rid)
+            if timing is not None:
+                timing.token_times_s.append(self.now)
             if len(req.generated) >= req.max_new_tokens or \
                     self.lengths[i] >= self.T - 1:
                 req.done = True
                 self.slots[i] = None
                 self.lengths[i] = 0
+                if timing is not None:
+                    timing.done_s = self.now
 
     def run(self, requests: list[Request]) -> list[Request]:
-        """Continuous batching: admit whenever a slot frees."""
-        pending = list(requests)
+        """Continuous batching: admit whenever a slot frees.
+
+        Requests with ``arrival_s > 0`` are held until the engine clock
+        reaches them (open-loop traffic).  When every slot is idle and the
+        next arrival is in the future, the clock fast-forwards to it — the
+        idle gap is honored on the virtual timeline without wall-time cost.
+        """
+        pending = sorted(requests, key=lambda r: r.arrival_s)
         done: list[Request] = []
         while pending or any(s is not None for s in self.slots):
-            while pending and self._free_slot() is not None:
+            idle = not any(s is not None for s in self.slots)
+            if idle and pending and pending[0].arrival_s > self.now:
+                self.now = pending[0].arrival_s
+            while (pending and pending[0].arrival_s <= self.now
+                   and self._free_slot() is not None):
                 if self.admit(pending[0]):
                     pending.pop(0)
                 else:
@@ -256,3 +388,14 @@ class ServeEngine:
                 if r.done and r not in done:
                     done.append(r)
         return done
+
+    def reset(self):
+        """Clear serving state (slots, stats, clock, timings) but keep the
+        compiled/planned functions — warmup run, reset, measured run."""
+        self.cache = jax.tree.map(jnp.zeros_like, self.cache)
+        self.lengths = np.zeros(self.B, np.int32)
+        self.slots = [None] * self.B
+        self.stats = EngineStats(plan=self.plan)
+        self.now = 0.0
+        if self.telemetry is not None:
+            self.telemetry.clear()

@@ -1,0 +1,118 @@
+"""Measured serving characterization launcher: scenario x batch x plan sweep.
+
+    PYTHONPATH=src python -m repro.launch.characterize --arch smollm-360m \
+        --reduced --scenario chatbot --batches 1,2,4 --plan auto
+
+Drives the live ServeEngine with a named traffic scenario (see
+``repro.workload.list_scenarios``), records host telemetry, prints
+per-batch measured launch tax + TTFT/ITL percentiles with a
+CPU/GPU-bound classification, and writes to ``--out-dir``:
+
+  workload_<scenario>.jsonl     replayable traffic trace (--replay loads one)
+  trace_<scenario>_b<N>.json    merged host+modeled-device Chrome trace
+                                (open in Perfetto / chrome://tracing)
+  characterize.json             BENCH-style summary of the whole sweep
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.core.device_model import PLATFORMS
+from repro.core.export import save_merged_trace
+from repro.inference.engine import PLAN_STRATEGIES
+from repro.models import init_params
+from repro.telemetry.characterize import characterize
+from repro.workload import list_scenarios, load_workload, save_workload
+
+
+def write_artifacts(result, out_dir: str) -> dict:
+    """Write workload JSONL, per-batch Chrome traces, and the summary."""
+    os.makedirs(out_dir, exist_ok=True)
+    paths = {}
+    wl = os.path.join(out_dir, f"workload_{result.scenario}.jsonl")
+    paths["workload"] = save_workload(result.workload, wl)
+    for p in result.points:
+        tr = os.path.join(out_dir,
+                          f"trace_{result.scenario}_b{p.batch}.json")
+        paths[f"trace_b{p.batch}"] = save_merged_trace(
+            p.spans, result.platform, tr,
+            device_events=p.modeled_events,
+            device_anchors=p.decode_anchors,
+            metadata={"arch": result.arch, "scenario": result.scenario,
+                      "plan": result.plan, "batch": p.batch})
+    summary = os.path.join(out_dir, "characterize.json")
+    with open(summary, "w") as f:
+        json.dump(result.summary(), f, indent=2)
+    paths["summary"] = summary
+    return paths
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--scenario", default="chatbot",
+                    choices=list_scenarios())
+    ap.add_argument("--batches", default="1,2,4",
+                    help="comma-separated slot-pool sizes to sweep")
+    ap.add_argument("--plan", default="auto", choices=PLAN_STRATEGIES)
+    ap.add_argument("--platform", default="TPU-v5e",
+                    choices=sorted(PLATFORMS))
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prompt-cap", type=int, default=24,
+                    help="clip scenario prompt lengths (0 = no cap)")
+    ap.add_argument("--output-cap", type=int, default=8,
+                    help="clip scenario output lengths (0 = no cap)")
+    ap.add_argument("--time-scale", type=float, default=1.0,
+                    help="compress the arrival timeline by this factor")
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip the warmup pass (timings include compiles)")
+    ap.add_argument("--replay", default=None,
+                    help="replay a recorded workload JSONL instead of "
+                         "generating from the scenario")
+    ap.add_argument("--out-dir", default="characterize-out")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    workload = load_workload(args.replay) if args.replay else None
+    batches = [int(b) for b in args.batches.split(",")]
+
+    result = characterize(
+        cfg, params, scenario=args.scenario, batches=batches,
+        plan=args.plan, platform=args.platform, n_requests=args.requests,
+        seed=args.seed, prompt_cap=args.prompt_cap or None,
+        output_cap=args.output_cap or None, time_scale=args.time_scale,
+        max_len=args.max_len, warmup=not args.no_warmup,
+        workload=workload)
+
+    for p in result.points:
+        cls = result.boundedness.classify(p.batch)
+        r = p.row()
+        print(f"batch={p.batch:<3d} {cls:<9s} "
+              f"launch_tax/step={r['decode_launch_tax_us']}us "
+              f"step={r['mean_decode_step_us']}us "
+              f"ttft_p50={r['ttft_p50_ms']}ms "
+              f"ttft_p99={r['ttft_p99_ms']}ms "
+              f"itl_p50={r['itl_p50_ms']}ms "
+              f"itl_p99={r['itl_p99_ms']}ms "
+              f"tok/s={r['tokens_per_s']}")
+    infl = result.boundedness.inflection_batch
+    print(f"inflection_batch={infl} "
+          f"({'always CPU/dispatch-bound in range' if infl is None else 'GPU/compute-bound from here'})")
+
+    paths = write_artifacts(result, args.out_dir)
+    print(json.dumps({"summary": result.summary(), "artifacts": paths}))
+
+
+if __name__ == "__main__":
+    main()

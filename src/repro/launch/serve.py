@@ -34,6 +34,9 @@ def main():
     ap.add_argument("--plan", default="jit", choices=PLAN_STRATEGIES)
     ap.add_argument("--platform", default="TPU-v5e",
                     choices=sorted(PLATFORMS))
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip the warmup pass; measured fields (launch "
+                         "tax, TTFT, ITL) then include jit-compile time")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -43,10 +46,19 @@ def main():
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
                       max_len=args.max_len, plan=args.plan,
                       platform=args.platform)
-    rng = np.random.default_rng(0)
-    reqs = [Request(i, prompt=list(rng.integers(0, cfg.vocab_size, 12)),
-                    max_new_tokens=args.max_new)
-            for i in range(args.requests)]
+
+    def make_requests():
+        rng = np.random.default_rng(0)
+        return [Request(i, prompt=list(rng.integers(0, cfg.vocab_size, 12)),
+                        max_new_tokens=args.max_new)
+                for i in range(args.requests)]
+
+    if not args.no_warmup:
+        # pay tracing/planning/jit before measuring: the reported launch
+        # tax and TTFT/ITL are steady-state serving, not compile time
+        eng.run(make_requests())
+        eng.reset()
+    reqs = make_requests()
     t0 = time.time()
     done = eng.run(reqs)
     dt = time.time() - t0
@@ -61,8 +73,14 @@ def main():
             st.dispatches_per_decode_step, 2),
         "prefill_dispatches": st.prefill_dispatches,
         "modeled_tklqt_us": round(st.modeled_tklqt_s * 1e6, 1),
+        "measured_launch_tax_per_step_us": round(
+            st.launch_tax_per_step_s * 1e6, 1),
         "mean_occupancy": round(float(np.mean(st.slot_occupancy)), 2),
         "tok_per_s": round(st.tokens_out / dt, 1),
+        "ttft_ms": {rid: round(t * 1e3, 3)
+                    for rid, t in sorted(st.ttft_s.items())},
+        "mean_ttft_ms": round(st.mean_ttft_s * 1e3, 3),
+        "mean_itl_ms": round(st.mean_itl_s * 1e3, 3),
     }))
 
 

@@ -21,7 +21,7 @@ import jax
 import jax.extend.core as jexc
 
 from repro.core.tracing import Trace, _is_drop, _read
-from repro.runtime.plan import LaunchPlan
+from repro.runtime.plan import LaunchPlan, segment_label
 
 # (trace.token, plan.key(), input signature) -> [(jitted fn, free vars, outs)]
 _SEG_CACHE: OrderedDict = OrderedDict()
@@ -49,12 +49,23 @@ def _args_signature(args) -> tuple:
 
 
 class PlanExecutor:
-    """Executes a trace segment-by-segment under a LaunchPlan."""
+    """Executes a trace segment-by-segment under a LaunchPlan.
 
-    def __init__(self, trace: Trace, plan: Optional[LaunchPlan] = None):
+    ``recorder`` (a ``repro.telemetry.spans.SpanRecorder``) captures one
+    host-dispatch span per segment launch — the measured counterpart of
+    the simulated host lane in ``core.export``.  Timestamps are RAW
+    ``perf_counter`` values: fine on their own, but do not share one
+    recorder with ``ServeEngine``, whose spans sit on its virtual serving
+    clock — the engine instead re-lays these segment times onto its clock
+    itself (``_record_segments``) so merged traces stay aligned.
+    """
+
+    def __init__(self, trace: Trace, plan: Optional[LaunchPlan] = None, *,
+                 recorder=None):
         self.trace = trace
         self.plan = (plan or LaunchPlan.eager(len(trace.kernels)))
         self.plan.validate(len(trace.kernels))
+        self.recorder = recorder
         self._compiled = None
 
     # ------------------------------------------------------------ compile
@@ -140,7 +151,8 @@ class PlanExecutor:
             env[iv] = val
 
         host_times = []
-        for jfn, free, outs in segs:
+        rec = self.recorder
+        for si, (jfn, free, outs) in enumerate(segs):
             vals = [env[v] if not isinstance(v, tuple) else v[1]
                     for v in free]
             t0 = time.perf_counter()
@@ -149,6 +161,10 @@ class PlanExecutor:
             if measure:
                 jax.block_until_ready(res)
             host_times.append(t1 - t0)
+            if rec is not None and rec.enabled:
+                rec.add(segment_label(self.trace.kernels,
+                                      self.plan.segments[si]),
+                        "dispatch", t0, t1, tid=1, segment=si)
             for v, o in zip(outs, res):
                 env[v] = o
 
@@ -164,10 +180,15 @@ class PlanExecutor:
     def call(self, *args):
         """Like run(), but returns outputs re-packed into the traced
         function's original output pytree (engine-facing API)."""
-        outputs, _ = self.run(*args)
-        if self.trace.out_tree is None:
-            return outputs
-        return jax.tree.unflatten(self.trace.out_tree, outputs)
+        return self.call_timed(*args)[0]
+
+    def call_timed(self, *args):
+        """call() plus the measured per-segment host dispatch times —
+        the engine's measured launch tax for one invocation."""
+        outputs, host_times = self.run(*args)
+        if self.trace.out_tree is not None:
+            outputs = jax.tree.unflatten(self.trace.out_tree, outputs)
+        return outputs, host_times
 
     def measure_host(self, *args, repeats: int = 3):
         """Warm up (compile) then measure median per-segment dispatch time."""

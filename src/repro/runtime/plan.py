@@ -18,6 +18,13 @@ from typing import Optional, Sequence
 from repro.core.proximity import fusion_segments
 
 
+def segment_label(kernels: Sequence, seg: Sequence[int]) -> str:
+    """Display name of one plan segment: the first member kernel's name,
+    prefixed with the fused count when the segment spans several."""
+    name = kernels[seg[0]].name
+    return name if len(seg) == 1 else f"fused[{len(seg)}]:{name}"
+
+
 @dataclass(frozen=True)
 class LaunchPlan:
     strategy: str                       # eager | whole_graph | chain | auto | custom

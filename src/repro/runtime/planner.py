@@ -25,7 +25,7 @@ from repro.core.device_model import (KernelEvent, PLATFORMS, PlatformSpec,
                                      kernel_duration)
 from repro.core.metrics import SkipReport, report
 from repro.core.tracing import Trace
-from repro.runtime.plan import LaunchPlan
+from repro.runtime.plan import LaunchPlan, segment_label
 
 DEFAULT_LENGTHS = (2, 4, 8, 16, 32)
 
@@ -53,9 +53,8 @@ def simulate_plan(kernels: Sequence, plan: LaunchPlan, spec: PlatformSpec, *,
         start = max(t_host, device_free)
         end = start + dur
         device_free = end
-        name = (kernels[seg[0]].name if len(seg) == 1
-                else f"fused[{len(seg)}]:{kernels[seg[0]].name}")
-        events.append(KernelEvent(name, launch_begin, t_host, start, end))
+        events.append(KernelEvent(segment_label(kernels, seg),
+                                  launch_begin, t_host, start, end))
     return events
 
 

@@ -1,0 +1,21 @@
+"""Telemetry subsystem: span recording, latency metrics, measured sweeps.
+
+Only the dependency-light pieces (spans, metrics) import eagerly — the
+serving engine imports ``repro.telemetry.metrics``, so this package init
+must not import the engine back (``characterize`` does).  The heavy
+driver is re-exported lazily.
+"""
+from repro.telemetry.metrics import (  # noqa: F401
+    LatencySummary, RequestTiming, percentile, percentiles, summarize,
+)
+from repro.telemetry.spans import Span, SpanRecorder  # noqa: F401
+
+_LAZY = ("CharacterizationResult", "MeasuredPoint", "characterize",
+         "classify_measured_sweep", "run_point")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.telemetry import characterize as _c
+        return getattr(_c, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,194 @@
+"""Measured SKIP characterization of the serving engine under a scenario.
+
+This is the repo's counterpart of the paper's real-trace side: instead of
+simulating a kernel stream against ``core.device_model``, it drives the
+live ``ServeEngine`` with a named traffic scenario, records host-side
+telemetry (per-step dispatch spans, per-request TTFT/ITL/E2E), sweeps the
+slot-pool size, and classifies the CPU/GPU-bound inflection from the
+MEASURED per-step latency curve via ``core.boundedness`` — flat step time
+in batch = dispatch-bound (more slots are free), growing step time =
+compute-bound (the paper's transition, observed rather than modeled).
+
+Each run per batch point is warmup-then-measure: the warmup pass pays
+tracing/planning/jit once so measured timings are steady-state serving.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+from repro.core.boundedness import BoundednessResult, classify_sweep
+from repro.inference.engine import Request, ServeEngine
+from repro.telemetry.metrics import LatencySummary, summarize
+from repro.telemetry.spans import SpanRecorder
+from repro.workload.generator import Workload, sample_requests
+
+MAX_DEVICE_ANCHORS = 64     # cap modeled-lane replication in exported traces
+
+
+@dataclass
+class _MeasuredReport:
+    """Measured stand-in for SkipReport in classify_sweep: tklqt is the
+    measured mean decode-step latency, queue_share the non-dispatch part."""
+    tklqt: float
+    queue_share: float
+
+
+def classify_measured_sweep(batches: Sequence[int],
+                            step_times_s: Sequence[float],
+                            launch_tax_s: Optional[Sequence[float]] = None
+                            ) -> BoundednessResult:
+    """Boundedness from a measured batch sweep, via classify_sweep."""
+    if launch_tax_s is None:
+        launch_tax_s = [0.0] * len(step_times_s)
+    reports = [
+        _MeasuredReport(t, max(0.0, 1.0 - (l / t)) if t > 0 else 0.0)
+        for t, l in zip(step_times_s, launch_tax_s)
+    ]
+    return classify_sweep(batches, reports)
+
+
+@dataclass
+class MeasuredPoint:
+    """One batch point of a measured serving sweep."""
+    batch: int
+    latency: LatencySummary
+    mean_decode_step_s: float
+    launch_tax_per_step_s: float          # prefill+decode, per engine step
+    decode_launch_tax_s: float            # decode only, per decode step
+    dispatches_per_decode_step: float
+    modeled_tklqt_s: float
+    tokens_per_s: float
+    mean_occupancy: float
+    tokens_out: int
+    decode_steps: int
+    spans: list = field(default_factory=list)           # telemetry Spans
+    modeled_events: list = field(default_factory=list)  # one decode step
+    decode_anchors: list = field(default_factory=list)  # decode span starts
+
+    def row(self) -> dict:
+        out = {
+            "batch": self.batch,
+            "mean_decode_step_us": round(self.mean_decode_step_s * 1e6, 1),
+            "launch_tax_per_step_us":
+                round(self.launch_tax_per_step_s * 1e6, 1),
+            "decode_launch_tax_us": round(self.decode_launch_tax_s * 1e6, 1),
+            "dispatches_per_decode_step":
+                round(self.dispatches_per_decode_step, 2),
+            "modeled_tklqt_us": round(self.modeled_tklqt_s * 1e6, 1),
+            "tokens_per_s": round(self.tokens_per_s, 1),
+            "mean_occupancy": round(self.mean_occupancy, 2),
+            "tokens_out": self.tokens_out,
+            "decode_steps": self.decode_steps,
+        }
+        out.update(self.latency.row())
+        return out
+
+
+@dataclass
+class CharacterizationResult:
+    arch: str
+    scenario: str
+    plan: str
+    platform: str
+    workload: Workload
+    points: list                     # list[MeasuredPoint], one per batch
+    boundedness: BoundednessResult
+
+    def summary(self) -> dict:
+        return {
+            "arch": self.arch, "scenario": self.scenario,
+            "plan": self.plan, "platform": self.platform,
+            "seed": self.workload.seed,
+            "n_requests": self.workload.n,
+            "batches": [p.batch for p in self.points],
+            "inflection_batch": self.boundedness.inflection_batch,
+            "classification": {
+                str(p.batch): self.boundedness.classify(p.batch)
+                for p in self.points
+            },
+            "points": [p.row() for p in self.points],
+        }
+
+
+def _requests(workload: Workload) -> list:
+    # engine Requests are mutable run state; mint fresh ones per run
+    return [Request(r.rid, prompt=list(r.prompt),
+                    max_new_tokens=r.max_new_tokens,
+                    arrival_s=r.arrival_s)
+            for r in workload.requests]
+
+
+def run_point(cfg, params, workload: Workload, *, batch: int,
+              plan: str = "auto", platform: str = "TPU-v5e",
+              max_len: int = 256, warmup: bool = True) -> MeasuredPoint:
+    """Serve the workload with ``batch`` slots and measure one sweep point."""
+    rec = SpanRecorder()
+    eng = ServeEngine(cfg, params, max_batch=batch, max_len=max_len,
+                      plan=plan, platform=platform, telemetry=rec)
+    if warmup:
+        eng.run(_requests(workload))
+        eng.reset()
+    eng.run(_requests(workload))
+    st = eng.stats
+    lat = summarize(list(eng.timings.values()))
+    steps = st.step_times_s
+    mean_step = sum(steps) / len(steps) if steps else 0.0
+    planned = eng._planned_decode
+    decode_spans = [s for s in rec.spans if s.cat == "decode"]
+    return MeasuredPoint(
+        batch=batch,
+        latency=lat,
+        mean_decode_step_s=mean_step,
+        launch_tax_per_step_s=st.launch_tax_per_step_s,
+        decode_launch_tax_s=st.launch_tax_per_decode_step_s,
+        dispatches_per_decode_step=st.dispatches_per_decode_step,
+        modeled_tklqt_s=st.modeled_tklqt_s,
+        tokens_per_s=st.tokens_out / eng.now if eng.now else 0.0,
+        mean_occupancy=(sum(st.slot_occupancy) / len(st.slot_occupancy)
+                        if st.slot_occupancy else 0.0),
+        tokens_out=st.tokens_out,
+        decode_steps=st.decode_steps,
+        spans=list(rec.spans),
+        modeled_events=(list(planned.modeled_events) if planned else []),
+        decode_anchors=[s.t0 for s in decode_spans[:MAX_DEVICE_ANCHORS]],
+    )
+
+
+def characterize(cfg, params, *, scenario: str = "chatbot",
+                 batches: Sequence[int] = (1, 2, 4), plan: str = "auto",
+                 platform: str = "TPU-v5e", n_requests: int = 6,
+                 seed: int = 0, prompt_cap: Optional[int] = 24,
+                 output_cap: Optional[int] = 8, time_scale: float = 1.0,
+                 max_len: int = 256, warmup: bool = True,
+                 workload: Optional[Workload] = None
+                 ) -> CharacterizationResult:
+    """Scenario x batch sweep over the live engine -> measured boundedness.
+
+    Pass ``workload`` (e.g. loaded from a recorded JSONL trace) to replay
+    exact traffic instead of generating it from the scenario registry.
+    """
+    if workload is None:
+        workload = sample_requests(scenario, n_requests, seed=seed,
+                                   vocab_size=cfg.vocab_size,
+                                   prompt_cap=prompt_cap,
+                                   output_cap=output_cap,
+                                   time_scale=time_scale)
+    elif workload.vocab_size > cfg.vocab_size:
+        # JAX clamps out-of-range gather indices silently — a replayed
+        # trace from a bigger-vocab model would "run" but measure garbage
+        raise ValueError(
+            f"workload was recorded for vocab_size={workload.vocab_size} "
+            f"but model {cfg.name} has vocab_size={cfg.vocab_size}; "
+            f"re-record the trace against this config")
+    points = [run_point(cfg, params, workload, batch=b, plan=plan,
+                        platform=platform, max_len=max_len, warmup=warmup)
+              for b in batches]
+    bound = classify_measured_sweep(
+        [p.batch for p in points],
+        [p.mean_decode_step_s for p in points],
+        [p.decode_launch_tax_s for p in points])
+    return CharacterizationResult(
+        arch=cfg.name, scenario=workload.scenario, plan=plan,
+        platform=platform, workload=workload, points=points,
+        boundedness=bound)

@@ -1,0 +1,8 @@
+"""Workload subsystem: scenario registry, seeded generators, JSONL replay."""
+from repro.workload.generator import (  # noqa: F401
+    Workload, WorkloadRequest, sample_requests,
+)
+from repro.workload.scenarios import (  # noqa: F401
+    LengthDist, Scenario, get_scenario, list_scenarios, register_scenario,
+)
+from repro.workload.trace_io import load_workload, save_workload  # noqa: F401

@@ -1,0 +1,324 @@
+"""Workload & telemetry subsystem: generator determinism, JSONL
+record/replay round-trip, percentile aggregation vs numpy, measured-sweep
+boundedness classification, degenerate find_inflection guards, and the
+engine's per-request TTFT/ITL accounting."""
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.boundedness import find_inflection
+from repro.core.export import merged_chrome_trace
+from repro.inference.engine import Request, ServeEngine
+from repro.models import init_params
+from repro.telemetry.characterize import (characterize,
+                                          classify_measured_sweep)
+from repro.telemetry.metrics import (RequestTiming, percentile, percentiles,
+                                     summarize)
+from repro.telemetry.spans import SpanRecorder
+from repro.workload import (get_scenario, list_scenarios, load_workload,
+                            sample_requests, save_workload)
+
+
+# ------------------------------------------------------------ workload
+def test_scenario_catalog_complete():
+    names = list_scenarios()
+    for expected in ("chatbot", "code-completion", "summarization",
+                     "agentic"):
+        assert expected in names
+    with pytest.raises(KeyError):
+        get_scenario("nope")
+
+
+@pytest.mark.parametrize("scenario", ["chatbot", "code-completion",
+                                      "summarization", "agentic"])
+def test_generator_deterministic_under_seed(scenario):
+    a = sample_requests(scenario, 12, seed=7, vocab_size=503)
+    b = sample_requests(scenario, 12, seed=7, vocab_size=503)
+    c = sample_requests(scenario, 12, seed=8, vocab_size=503)
+    assert [r.to_json() for r in a.requests] == \
+        [r.to_json() for r in b.requests]
+    assert [r.to_json() for r in a.requests] != \
+        [r.to_json() for r in c.requests]
+    # arrivals are sorted; prompts within the vocab
+    arr = [r.arrival_s for r in a.requests]
+    assert arr == sorted(arr)
+    assert all(0 <= t < 503 for r in a.requests for t in r.prompt)
+
+
+def test_scenario_rejects_degenerate_params():
+    from repro.workload.scenarios import LengthDist, Scenario
+    dist = LengthDist("fixed", 4)
+    with pytest.raises(ValueError, match="rate_rps"):
+        Scenario("x", "", "poisson", dist, dist)          # rate_rps=0
+    with pytest.raises(ValueError, match="burst_s"):
+        Scenario("x", "", "bursty", dist, dist, rate_rps=1.0)
+    with pytest.raises(ValueError, match="arrival"):
+        Scenario("x", "", "warp", dist, dist)
+
+
+def test_closed_loop_arrivals_all_zero():
+    wl = sample_requests("summarization", 5, seed=0)
+    assert all(r.arrival_s == 0.0 for r in wl.requests)
+
+
+def test_bursty_arrivals_have_idle_gaps():
+    sc = get_scenario("agentic")
+    wl = sample_requests(sc, 32, seed=3)
+    gaps = np.diff([r.arrival_s for r in wl.requests])
+    # at least one inter-burst gap of ~idle_s must appear in 32 arrivals
+    assert gaps.max() >= sc.idle_s
+
+
+def test_time_scale_compresses_arrivals():
+    slow = sample_requests("chatbot", 16, seed=0)
+    fast = sample_requests("chatbot", 16, seed=0, time_scale=4.0)
+    assert fast.requests[-1].arrival_s < slow.requests[-1].arrival_s
+    with pytest.raises(ValueError):
+        sample_requests("chatbot", 4, seed=0, time_scale=0.0)
+
+
+def test_length_caps_apply():
+    wl = sample_requests("summarization", 8, seed=0, prompt_cap=16,
+                         output_cap=4)
+    assert all(len(r.prompt) <= 16 for r in wl.requests)
+    assert all(r.max_new_tokens <= 4 for r in wl.requests)
+
+
+def test_record_replay_roundtrip_byte_identical(tmp_path):
+    wl = sample_requests("chatbot", 9, seed=5, vocab_size=211)
+    p1 = str(tmp_path / "wl.jsonl")
+    p2 = str(tmp_path / "wl2.jsonl")
+    save_workload(wl, p1)
+    wl2 = load_workload(p1)
+    save_workload(wl2, p2)
+    assert open(p1, "rb").read() == open(p2, "rb").read()
+    assert wl2.scenario == wl.scenario and wl2.seed == wl.seed
+    assert [r.to_json() for r in wl2.requests] == \
+        [r.to_json() for r in wl.requests]
+
+
+def test_load_rejects_header_mismatch(tmp_path):
+    p = str(tmp_path / "bad.jsonl")
+    wl = sample_requests("chatbot", 3, seed=0)
+    save_workload(wl, p)
+    lines = open(p).read().splitlines()
+    open(p, "w").write("\n".join(lines[:-1]) + "\n")  # drop one request
+    with pytest.raises(ValueError):
+        load_workload(p)
+
+
+# ------------------------------------------------------------ metrics
+def test_percentiles_match_numpy_reference():
+    rng = np.random.default_rng(0)
+    for vals in ([1.0], [3.0, 1.0, 2.0], list(rng.lognormal(size=101)),
+                 list(rng.uniform(0, 1, size=40))):
+        for q in (50, 95, 99, 0, 100, 12.5):
+            np.testing.assert_allclose(
+                percentile(vals, q), np.percentile(vals, q), rtol=1e-12)
+
+
+def test_percentiles_empty_is_nan():
+    assert math.isnan(percentile([], 50))
+    assert all(math.isnan(v) for v in percentiles([]).values())
+
+
+def test_request_timing_derived_metrics():
+    t = RequestTiming(0, arrival_s=1.0, first_token_s=1.5, done_s=2.5,
+                      token_times_s=[1.5, 2.0, 2.5])
+    assert t.ttft_s == pytest.approx(0.5)
+    assert t.e2e_s == pytest.approx(1.5)
+    assert t.itl_s == pytest.approx([0.5, 0.5])
+    s = summarize([t])
+    assert s.ttft["p50"] == pytest.approx(0.5)
+    assert s.mean_itl_s == pytest.approx(0.5)
+    assert s.n_requests == 1
+
+
+# ------------------------------------------------------------ spans
+def test_span_recorder_disabled_records_nothing():
+    rec = SpanRecorder(enabled=False)
+    rec.add("x", "host", 0.0, 1.0)
+    with rec.span("y"):
+        pass
+    assert rec.spans == []
+
+
+def test_span_recorder_chrome_export():
+    rec = SpanRecorder()
+    rec.add("a", "decode", 0.0, 0.001, batch=2)
+    rec.add("b", "dispatch", 0.0, 0.0005, tid=1)
+    doc = merged_chrome_trace(rec.spans, "TPU-v5e")
+    assert len(doc["traceEvents"]) == 2
+    ev = doc["traceEvents"][0]
+    assert ev["ts"] == 0.0 and ev["dur"] == pytest.approx(1000.0)
+    assert ev["args"] == {"batch": 2}
+    assert doc["metadata"]["platform"] == "TPU-v5e"
+    # valid JSON end to end (Perfetto-loadable shape)
+    json.dumps(doc)
+
+
+def test_plan_executor_records_dispatch_spans():
+    from repro.core.tracing import trace_fn
+    from repro.runtime import LaunchPlan, PlanExecutor
+
+    def f(x, w):
+        return jax.nn.gelu(x @ w) * 2
+
+    key = jax.random.PRNGKey(0)
+    args = (jax.random.normal(key, (4, 8)), jax.random.normal(key, (8, 8)))
+    tr = trace_fn(f, *args)
+    rec = SpanRecorder()
+    ex = PlanExecutor(tr, LaunchPlan.chain(tr.kernel_names, 2),
+                      recorder=rec)
+    ex.run(*args)
+    assert len(rec.spans) == ex.n_launches
+    assert all(s.cat == "dispatch" and s.tid == 1 for s in rec.spans)
+
+
+# ------------------------------------------------------------ boundedness
+def test_find_inflection_degenerate_cases():
+    assert find_inflection([], []) is None
+    assert find_inflection([1, 2], [1.0]) is None          # length mismatch
+    assert find_inflection([1, 2, 4], [0.0, 1.0, 2.0]) is None   # zero base
+    assert find_inflection([1, 2, 4], [1e-15, 1.0, 2.0]) is None  # near-zero
+    assert find_inflection([1, 2, 4], [1.0, 1.1, 2.0]) == 4       # sane
+
+
+def test_measured_sweep_agrees_with_classify_sweep():
+    """classify_measured_sweep on a synthetic measured curve must agree
+    with classify_sweep fed the same TKLQT values."""
+    from repro.core.boundedness import classify_sweep
+
+    class R:
+        def __init__(self, t):
+            self.tklqt = t
+            self.queue_share = 0.0
+
+    batches = [1, 2, 4, 8, 16]
+    flat_then_rising = [1.0, 1.05, 1.1, 1.9, 3.9]
+    measured = classify_measured_sweep(batches, flat_then_rising)
+    modeled = classify_sweep(batches, [R(t) for t in flat_then_rising])
+    assert measured.inflection_batch == modeled.inflection_batch == 8
+    assert measured.classify(4) == modeled.classify(4) == "CPU-bound"
+    assert measured.classify(8) == modeled.classify(8) == "GPU-bound"
+    # always-flat curve: no inflection, CPU-bound everywhere
+    flat = classify_measured_sweep(batches, [1.0] * 5)
+    assert flat.inflection_batch is None
+
+
+# ------------------------------------------------------------ engine+sweep
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = reduced(get_config("smollm-360m"), n_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_engine_reports_ttft_itl_and_telemetry(tiny_setup):
+    cfg, params = tiny_setup
+    rec = SpanRecorder()
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64, telemetry=rec)
+    done = eng.run([Request(0, prompt=list(range(5, 13)), max_new_tokens=4),
+                    Request(1, prompt=list(range(3, 9)), max_new_tokens=3,
+                            arrival_s=0.001)])
+    st = eng.stats
+    assert len(done) == 2
+    assert set(st.ttft_s) == {0, 1}
+    assert all(t > 0 for t in st.ttft_s.values())
+    assert st.mean_itl_s > 0 and len(st.itl_samples_s) > 0
+    assert set(st.e2e_s) == {0, 1}
+    # e2e covers ttft plus decoding
+    assert st.e2e_s[0] >= st.ttft_s[0]
+    assert st.measured_dispatch_s > 0
+    cats = {s.cat for s in rec.spans}
+    assert "prefill" in cats and "decode" in cats
+    # spans sit on the engine's virtual clock
+    assert all(0 <= s.t0 <= s.t1 <= eng.now for s in rec.spans)
+    # per-request timings round-trip through the summary
+    summary = summarize(list(eng.timings.values()))
+    assert summary.n_requests == 2
+    assert summary.ttft["p50"] > 0
+
+
+def test_engine_rejects_zero_slots(tiny_setup):
+    cfg, params = tiny_setup
+    with pytest.raises(ValueError, match="max_batch"):
+        ServeEngine(cfg, params, max_batch=0)
+
+
+def test_engine_single_token_budget_exact(tiny_setup):
+    cfg, params = tiny_setup
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64)
+    done = eng.run([Request(0, prompt=[3, 4, 5], max_new_tokens=1)])
+    assert len(done) == 1
+    assert len(done[0].generated) == 1        # exactly the budget
+    assert eng.stats.tokens_out == 1
+    assert eng.stats.decode_steps == 0        # never occupied a slot
+    assert eng.stats.e2e_s[0] == eng.stats.ttft_s[0]
+
+
+def test_engine_open_loop_fast_forwards_idle(tiny_setup):
+    cfg, params = tiny_setup
+    eng = ServeEngine(cfg, params, max_batch=1, max_len=64)
+    # second request arrives 100 virtual seconds later: the engine clock
+    # must jump, not sleep — measured TTFT stays small for both
+    done = eng.run([Request(0, prompt=[1, 2, 3, 4], max_new_tokens=2),
+                    Request(1, prompt=[5, 6, 7, 8], max_new_tokens=2,
+                            arrival_s=100.0)])
+    assert len(done) == 2
+    assert eng.now >= 100.0
+    assert eng.stats.ttft_s[1] < 50.0   # did not wait out the gap
+
+
+def test_engine_reset_keeps_plans_clears_state(tiny_setup):
+    cfg, params = tiny_setup
+    eng = ServeEngine(cfg, params, max_batch=1, max_len=64, plan="chain")
+    eng.run([Request(0, prompt=list(range(4, 12)), max_new_tokens=3)])
+    planned = eng._planned_decode
+    assert planned is not None
+    eng.reset()
+    assert eng.stats.decode_steps == 0 and eng.timings == {}
+    assert eng.now == 0.0
+    assert eng._planned_decode is planned          # compiled plans survive
+    done = eng.run([Request(0, prompt=list(range(4, 12)),
+                            max_new_tokens=3)])
+    assert len(done) == 1
+
+
+def test_characterize_sweep_replay_and_artifacts(tiny_setup, tmp_path):
+    cfg, params = tiny_setup
+    res = characterize(cfg, params, scenario="chatbot", batches=(1, 2),
+                       plan="chain", n_requests=3, seed=0, max_len=64,
+                       output_cap=3, prompt_cap=10)
+    assert [p.batch for p in res.points] == [1, 2]
+    for p in res.points:
+        assert p.latency.ttft["p50"] > 0
+        assert p.launch_tax_per_step_s > 0
+        assert p.dispatches_per_decode_step > 1     # planned, not jit
+        assert p.modeled_events and p.decode_anchors
+        assert res.boundedness.classify(p.batch) in ("CPU-bound",
+                                                     "GPU-bound")
+    s = res.summary()
+    json.dumps(s)                                   # JSON-serializable
+    assert s["scenario"] == "chatbot" and len(s["points"]) == 2
+
+    # replaying the recorded workload reproduces the exact traffic
+    p = str(tmp_path / "wl.jsonl")
+    save_workload(res.workload, p)
+    res2 = characterize(cfg, params, batches=(1,), plan="chain",
+                        max_len=64, workload=load_workload(p))
+    assert res2.workload.n == res.workload.n
+    assert [r.prompt for r in res2.workload.requests] == \
+        [r.prompt for r in res.workload.requests]
+
+
+def test_characterize_rejects_vocab_mismatch_replay(tiny_setup):
+    cfg, params = tiny_setup
+    wl = sample_requests("chatbot", 2, seed=0,
+                         vocab_size=cfg.vocab_size * 10)
+    with pytest.raises(ValueError, match="vocab_size"):
+        characterize(cfg, params, batches=(1,), workload=wl)

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import time
 
-import jax
 
 from benchmarks.common import build_skip, csv_row
 from repro.core.proximity import fusion_segments

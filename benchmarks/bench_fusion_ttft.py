@@ -49,11 +49,6 @@ def run() -> list[str]:
         base = ttft(kernels)
         # flash-analogue: fuse deterministic chains of attention primitives
         segs = fusion_segments(names, 8)
-        attn_segs = [s for s in segs if len(s) > 1 and all(
-            names[i] in ATTN_PRIMS for i in s)]
-        flat = []
-        covered = {i for s in attn_segs for i in s}
-        i = 0
         merged = []
         for s in segs:
             if len(s) > 1 and all(names[j] in ATTN_PRIMS for j in s):

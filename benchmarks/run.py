@@ -6,6 +6,12 @@ Prints ``name,us_per_call,derived`` CSV rows.  BENCH_FAST=1 trims depth.
 With ``--json-dir DIR`` (or ``BENCH_JSON=DIR``) each benchmark also writes
 a machine-readable ``BENCH_<name>.json`` artifact — rows, wall time,
 status — for CI perf-trajectory tracking.
+
+``--check-baseline [benchmarks/baselines.json]`` turns the artifacts into
+a regression gate: per bench, the median positive ``us_per_call`` must
+stay within ``tolerance x`` of the committed baseline median, or the run
+exits nonzero.  ``--update-baseline`` rewrites the baseline file from the
+current artifacts (commit the result deliberately).
 """
 from __future__ import annotations
 
@@ -28,7 +34,10 @@ BENCHES = [
     ("platform_sweep", "benchmarks.bench_platform_sweep"),  # Figs 10/11
     ("roofline", "benchmarks.bench_roofline"),            # beyond paper
     ("characterize", "benchmarks.bench_characterize"),    # measured serving
+    ("fused_decode", "benchmarks.bench_fused_decode"),    # fusion rules
 ]
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines.json")
 
 
 def _parse_row(row: str) -> dict:
@@ -40,6 +49,20 @@ def _parse_row(row: str) -> dict:
     return {"name": name, "us_per_call": us_f, "derived": derived}
 
 
+def _json_sanitize(obj):
+    """Strict-JSON payloads: inf/nan floats (e.g. a measured_speedup of
+    inf from a 0-cost fused run) become their string names instead of the
+    invalid bare ``Infinity``/``NaN`` tokens ``json.dump`` would emit.
+    Leaf conversion delegates to ``repro.core.fusion.json_safe`` so both
+    export paths share one representation."""
+    from repro.core.fusion import json_safe
+    if isinstance(obj, dict):
+        return {k: _json_sanitize(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_json_sanitize(v) for v in obj]
+    return json_safe(obj)
+
+
 def _write_artifact(json_dir: str, name: str, payload: dict) -> None:
     # artifacts are best-effort telemetry: a write failure must neither
     # abort the remaining benchmarks nor relabel a passing one as failed
@@ -47,11 +70,85 @@ def _write_artifact(json_dir: str, name: str, payload: dict) -> None:
     try:
         os.makedirs(json_dir, exist_ok=True)
         with open(path, "w") as fh:
-            json.dump(payload, fh, indent=2)
+            json.dump(_json_sanitize(payload), fh, indent=2,
+                      allow_nan=False)
     except OSError as e:
         print(f"# artifact write failed for {path}: {e!r}", flush=True)
         return
     print(f"# wrote {path}", flush=True)
+
+
+def _bench_median(payload: dict):
+    """Median of the positive us_per_call rows of one artifact (None when
+    the bench reports no positive timings — derived-only benches)."""
+    vals = sorted(r["us_per_call"] for r in payload.get("rows", [])
+                  if isinstance(r.get("us_per_call"), (int, float))
+                  and r["us_per_call"] > 0.0)
+    if not vals:
+        return None
+    mid = len(vals) // 2
+    return (vals[mid] if len(vals) % 2
+            else 0.5 * (vals[mid - 1] + vals[mid]))
+
+
+def check_baseline(json_dir: str, baseline_path: str, *,
+                   tolerance: float = None, update: bool = False,
+                   only=None) -> list:
+    """Compare BENCH_*.json medians against the committed baselines.
+
+    Returns a list of violation strings (empty = gate passes).  Only
+    benches with BOTH an artifact and a committed positive baseline are
+    gated, and ``only`` (the run's bench selection) further restricts the
+    gate to what THIS run produced — stale artifacts from earlier runs in
+    the same ``--json-dir`` never fail a partial ``--only`` run.
+    """
+    try:
+        with open(baseline_path) as fh:
+            base = json.load(fh)
+    except FileNotFoundError:
+        base = {"tolerance": 4.0, "benches": {}}
+    tol = tolerance if tolerance is not None else base.get("tolerance", 4.0)
+    violations = []
+    for name, _ in BENCHES:
+        if only and name not in only:
+            continue
+        path = os.path.join(json_dir, f"BENCH_{name}.json")
+        if not os.path.exists(path):
+            continue
+        with open(path) as fh:
+            payload = json.load(fh)
+        med = _bench_median(payload)
+        if update:
+            if med is not None:
+                base["benches"][name] = {"median_us": round(med, 3)}
+            continue
+        entry = base.get("benches", {}).get(name)
+        if entry is None or not entry.get("median_us"):
+            print(f"# baseline: {name} has no committed median, skipping",
+                  flush=True)
+            continue
+        if payload.get("status") != "ok":
+            violations.append(f"{name}: status={payload.get('status')}")
+            continue
+        if med is None:
+            violations.append(f"{name}: no positive timings to compare")
+            continue
+        limit = entry["median_us"] * tol
+        verdict = "ok" if med <= limit else "REGRESSION"
+        print(f"# baseline: {name} median={med:.1f}us "
+              f"baseline={entry['median_us']}us x{tol} "
+              f"limit={limit:.1f}us {verdict}", flush=True)
+        if med > limit:
+            violations.append(
+                f"{name}: median {med:.1f}us > {limit:.1f}us "
+                f"(baseline {entry['median_us']}us x {tol})")
+    if update:
+        base.setdefault("tolerance", tol)
+        with open(baseline_path, "w") as fh:
+            json.dump(base, fh, indent=2)
+            fh.write("\n")
+        print(f"# wrote {baseline_path}", flush=True)
+    return violations
 
 
 def main() -> None:
@@ -61,8 +158,20 @@ def main() -> None:
     ap.add_argument("--json-dir", default=os.environ.get("BENCH_JSON"),
                     help="write BENCH_<name>.json artifacts here "
                          "(default: $BENCH_JSON, off when unset)")
+    ap.add_argument("--check-baseline", nargs="?", const=DEFAULT_BASELINE,
+                    default=None, metavar="PATH",
+                    help="fail when any BENCH_*.json median regresses "
+                         "past tolerance x its committed baseline")
+    ap.add_argument("--baseline-tolerance", type=float, default=None,
+                    help="override the tolerance stored in the baseline "
+                         "file")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline file from this run's "
+                         "artifacts instead of gating")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if (args.check_baseline or args.update_baseline) and not args.json_dir:
+        ap.error("--check-baseline/--update-baseline need --json-dir")
 
     print("name,us_per_call,derived")
     failures = []
@@ -97,6 +206,16 @@ def main() -> None:
                 })
     if failures:
         sys.exit(1)
+    if args.check_baseline or args.update_baseline:
+        baseline_path = args.check_baseline or DEFAULT_BASELINE
+        violations = check_baseline(args.json_dir, baseline_path,
+                                    tolerance=args.baseline_tolerance,
+                                    update=args.update_baseline, only=only)
+        if violations:
+            print("# BASELINE REGRESSIONS:", flush=True)
+            for v in violations:
+                print(f"#   {v}", flush=True)
+            sys.exit(2)
 
 
 if __name__ == "__main__":

@@ -34,11 +34,11 @@ cp = next((b for i, b in enumerate(BATCHES)
            if rows["GH200"][i] < min(rows["Intel+H100"][i],
                                      rows["AMD+A100"][i])), None)
 print(f"\ncrossover (GH200 beats LC): batch {cp}")
-print(f"GH200 low-batch penalty (b=1): "
+print("GH200 low-batch penalty (b=1): "
       f"{rows['GH200'][0]/rows['Intel+H100'][0]:.2f}x")
-print(f"GH200 speedup at b=256: "
+print("GH200 speedup at b=256: "
       f"{min(rows['Intel+H100'][-1], rows['AMD+A100'][-1])/rows['GH200'][-1]:.2f}x")
 
 rec = skip.recommend(length=32)
-print(f"\nfusion opportunity (CPU-bound region): L=32 ideal speedup "
+print("\nfusion opportunity (CPU-bound region): L=32 ideal speedup "
       f"{rec.speedup:.2f}x from {rec.c_fused} deterministic chains")

@@ -7,7 +7,7 @@ hash and can be closed over by jit without retracing surprises.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import jax.numpy as jnp

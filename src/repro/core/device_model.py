@@ -15,7 +15,7 @@ TKLQT = sum of t_l (Eq. 2).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence
 
 

@@ -7,10 +7,21 @@ paper's idealized Eq. 8 speedup for comparison.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 
 from repro.core.proximity import mine_chains
 from repro.core.tracing import Trace
+
+
+def json_safe(value):
+    """JSON-exportable number: finite floats pass through, ``inf``/``nan``
+    become their string names.  Python's ``json`` would otherwise emit
+    bare ``Infinity``/``NaN`` tokens, which are NOT valid JSON and break
+    strict parsers reading exported reports."""
+    if isinstance(value, float) and not math.isfinite(value):
+        return str(value)
+    return value
 
 
 @dataclass
@@ -23,6 +34,21 @@ class FusionOutcome:
     fused_host_s: float
     measured_speedup: float        # eager host / fused host
     max_abs_err: float             # fused vs eager outputs
+
+    def row(self) -> dict:
+        """JSON-safe export dict: ``measured_speedup`` can be ``inf``
+        (0-cost fused time) or ``nan`` (0/0) by design — see
+        ``_speedup`` — so export paths must go through here."""
+        return {
+            "length": self.length,
+            "k_eager": self.k_eager,
+            "k_fused": self.k_fused,
+            "ideal_speedup": json_safe(self.ideal_speedup),
+            "eager_host_us": round(self.eager_host_s * 1e6, 3),
+            "fused_host_us": round(self.fused_host_s * 1e6, 3),
+            "measured_speedup": json_safe(self.measured_speedup),
+            "max_abs_err": json_safe(self.max_abs_err),
+        }
 
 
 def _speedup(eager_host: float, fused_host: float) -> float:

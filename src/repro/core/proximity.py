@@ -10,7 +10,7 @@ launch-count reduction:
 """
 from __future__ import annotations
 
-from collections import Counter, defaultdict
+from collections import Counter
 from dataclasses import dataclass
 from typing import Sequence
 

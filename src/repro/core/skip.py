@@ -126,6 +126,16 @@ class SKIP:
         from repro.telemetry.characterize import characterize
         return characterize(cfg, params, **kw)
 
+    @staticmethod
+    def autotune(cfg, params, **kw):
+        """Measurement-driven plan autotuning: characterize, gate the
+        candidate plans by the measured CPU/GPU-bound region, benchmark
+        them on the live engine, and return the persisted-plan-table
+        result.  Thin facade over ``repro.runtime.autotune.autotune``.
+        """
+        from repro.runtime.autotune import autotune
+        return autotune(cfg, params, **kw)
+
     # ------------------------------------------------------------ fusion
     def recommend(self, length: int = 8, threshold: float = 1.0):
         return prox.mine_chains(self.trace_.kernel_names, length, threshold)

@@ -8,7 +8,6 @@ convergence).  Wire volume drops ~4x vs f32 / ~2x vs bf16.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -67,7 +66,8 @@ def make_compressed_dp_grad(loss_fn, mesh, axis: str = "data"):
         return g, new_e, loss
 
     def apply(params, errors, batch):
-        rep = lambda t: jax.tree.map(lambda _: P(), t)
+        def rep(t):
+            return jax.tree.map(lambda _: P(), t)
         bspec = jax.tree.map(lambda _: P(axis), batch)
         return shard_map(
             shard_fn, mesh=mesh,

@@ -13,7 +13,6 @@ distributed/sharding.py (stage params are just a leading-dim shard).
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -9,10 +9,8 @@ makes e.g. smollm's 15-head attention or 8-KV-head caches lower cleanly on a
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -138,7 +136,6 @@ def param_specs(params, cfg: ModelConfig, mesh: Mesh, tp: str = "model",
     sharded over "data"; gathered just-in-time inside the MoE shard_map.
     """
     flat = jax.tree_util.tree_flatten_with_path(params)[0]
-    out = {}
 
     def key_of(p):
         return getattr(p, "key", getattr(p, "name", str(p)))
@@ -199,7 +196,7 @@ def cache_specs(cache, cfg: ModelConfig, mesh: Mesh,
         return valid_spec(shape, P(*(None,) * len(shape)), mesh)
 
     flat = jax.tree_util.tree_flatten_with_path(cache)[0]
-    specs = [spec_for(p, l) for p, l in flat]
+    specs = [spec_for(p, leaf) for p, leaf in flat]
     return jax.tree.unflatten(jax.tree.structure(cache), specs)
 
 

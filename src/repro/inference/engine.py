@@ -10,9 +10,14 @@ Execution plans: ``plan="jit"`` (default) runs prefill/decode as plain
 ``jax.jit`` closures.  Any other strategy routes both through the
 launch-plan runtime (``repro.runtime``): the step function is traced once,
 a ``LaunchPlan`` is chosen (``eager`` / ``whole_graph`` / ``chain`` /
-cost-aware ``auto``), and each step executes the plan's compiled segments
-— so ``EngineStats`` can report real per-step dispatch counts and the
-modeled TKLQT of the serving hot path, the paper's serving-time story.
+cost-aware ``auto`` / ``fused`` rule-substituted Pallas kernels), and
+each step executes the plan's compiled segments — so ``EngineStats`` can
+report real per-step dispatch counts and the modeled TKLQT of the
+serving hot path, the paper's serving-time story.
+
+``plan="autotuned"`` resolves the concrete strategy from a persisted
+plan table (``repro.runtime.autotune``) keyed by this engine's slot
+count — the measured characterize -> autotune -> serve loop.
 """
 from __future__ import annotations
 
@@ -30,7 +35,8 @@ from repro.configs.base import ModelConfig
 from repro.models import forward, make_cache
 from repro.telemetry.metrics import RequestTiming
 
-PLAN_STRATEGIES = ("jit", "eager", "whole_graph", "chain", "auto")
+PLAN_STRATEGIES = ("jit", "eager", "whole_graph", "chain", "auto", "fused",
+                   "autotuned")
 
 
 @dataclass
@@ -52,6 +58,8 @@ class EngineStats:
     plan: str = "jit"
     prefill_dispatches: int = 0    # host dispatches (launches) in prefills
     decode_dispatches: int = 0     # host dispatches across all decode steps
+    fused_dispatches: int = 0      # decode dispatches that ran fused kernels
+    rule_hits: dict = field(default_factory=dict)  # rule name -> launches
     modeled_tklqt_s: float = 0.0   # device-model TKLQT summed over steps
                                    # (0.0 under plan="jit": nothing modeled)
     measured_dispatch_s: float = 0.0  # measured host launch tax (all steps)
@@ -64,6 +72,11 @@ class EngineStats:
     @property
     def dispatches_per_decode_step(self) -> float:
         return (self.decode_dispatches / self.decode_steps
+                if self.decode_steps else 0.0)
+
+    @property
+    def fused_dispatches_per_decode_step(self) -> float:
+        return (self.fused_dispatches / self.decode_steps
                 if self.decode_steps else 0.0)
 
     @property
@@ -119,6 +132,7 @@ class _PlannedFn:
         self.platform = platform
         self.lengths = lengths
         self.executor = None
+        self.plan = None                # chosen LaunchPlan (after _build)
         self.modeled_tklqt_s = 0.0      # modeled TKLQT of ONE invocation
         self.modeled_events = []        # simulated device timeline, one call
         self.last_host_times = []       # measured per-segment dispatch, last call
@@ -138,9 +152,12 @@ class _PlannedFn:
                 [planner.chain(L) for L in self.lengths])[0].plan
         elif self.strategy == "auto":
             plan = planner.auto(lengths=self.lengths).plan
+        elif self.strategy == "fused":
+            plan = planner.fused_rules(lengths=self.lengths)
         else:
             raise ValueError(f"unknown plan strategy {self.strategy!r}; "
                              f"expected one of {PLAN_STRATEGIES}")
+        self.plan = plan
         self.executor = PlanExecutor(trace, plan)
         self.modeled_tklqt_s = planner.evaluate(plan).tklqt
         from repro.runtime.planner import simulate_plan
@@ -159,18 +176,52 @@ class _PlannedFn:
     def n_launches(self) -> int:
         return self.executor.n_launches if self.executor else 0
 
+    @property
+    def rule_names(self) -> list:
+        return self.plan.rule_names() if self.plan is not None else []
+
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  max_len: int = 256, greedy: bool = True,
                  plan: str = "jit", platform: str = "TPU-v5e",
-                 telemetry=None):
+                 plan_table=None, telemetry=None):
         if plan not in PLAN_STRATEGIES:
             raise ValueError(f"unknown plan {plan!r}; "
                              f"expected one of {PLAN_STRATEGIES}")
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch} "
-                             f"(an engine with no slots can never admit)")
+                             "(an engine with no slots can never admit)")
+        if plan == "autotuned":
+            # measured plan table (runtime.autotune): the strategy the
+            # autotuner benchmarked best for this slot count
+            from repro.runtime.autotune import PlanTable
+            if plan_table is None:
+                raise ValueError(
+                    "plan='autotuned' needs plan_table= (a PlanTable, "
+                    "a dict, or a path to a saved plan table)")
+            table = (plan_table if isinstance(plan_table, PlanTable)
+                     else PlanTable.from_any(plan_table))
+            if table.arch and table.arch != cfg.name:
+                raise ValueError(
+                    f"plan table was autotuned for arch "
+                    f"{table.arch!r}, engine config is {cfg.name!r}; "
+                    f"re-run repro.launch.autotune for this model")
+            if table.d_model and table.d_model != cfg.d_model:
+                raise ValueError(
+                    f"plan table was autotuned at d_model="
+                    f"{table.d_model} (reduced() keeps the arch name), "
+                    f"engine config has d_model={cfg.d_model}; re-run "
+                    f"repro.launch.autotune against this exact config")
+            if table.platform and table.platform != platform:
+                raise ValueError(
+                    f"plan table was autotuned for platform "
+                    f"{table.platform!r}, engine uses {platform!r}; "
+                    f"re-run repro.launch.autotune for this platform")
+            plan = table.lookup(max_batch)
+            self.plan_label = f"autotuned:{plan}"
+        else:
+            self.plan_label = plan
         self.cfg = cfg
         self.params = params
         self.B = max_batch
@@ -179,7 +230,7 @@ class ServeEngine:
                                 dtype=cfg.cdtype)
         self.lengths = np.zeros(max_batch, np.int32)
         self.slots: list[Optional[Request]] = [None] * max_batch
-        self.stats = EngineStats(plan=plan)
+        self.stats = EngineStats(plan=self.plan_label)
         self.greedy = greedy
         self.plan = plan
         self.platform = platform
@@ -277,6 +328,8 @@ class ServeEngine:
             self.stats.prefill_dispatches += pf.n_launches
             self.stats.modeled_tklqt_s += pf.modeled_tklqt_s
             self.stats.measured_dispatch_s += sum(pf.last_host_times)
+            for nm in pf.rule_names:
+                self.stats.rule_hits[nm] = self.stats.rule_hits.get(nm, 0) + 1
         first = self._sample(logits[0])
         dt = time.perf_counter() - t0
         t_begin = self.now
@@ -329,6 +382,10 @@ class ServeEngine:
                 self.params, self.cache, jnp.asarray(toks),
                 jnp.asarray(self.lengths))
             self.stats.decode_dispatches += self._planned_decode.n_launches
+            self.stats.fused_dispatches += \
+                len(self._planned_decode.rule_names)
+            for nm in self._planned_decode.rule_names:
+                self.stats.rule_hits[nm] = self.stats.rule_hits.get(nm, 0) + 1
             self.stats.modeled_tklqt_s += \
                 self._planned_decode.modeled_tklqt_s
             disp = sum(self._planned_decode.last_host_times)
@@ -395,7 +452,7 @@ class ServeEngine:
         self.cache = jax.tree.map(jnp.zeros_like, self.cache)
         self.lengths = np.zeros(self.B, np.int32)
         self.slots = [None] * self.B
-        self.stats = EngineStats(plan=self.plan)
+        self.stats = EngineStats(plan=self.plan_label)
         self.now = 0.0
         if self.telemetry is not None:
             self.telemetry.clear()

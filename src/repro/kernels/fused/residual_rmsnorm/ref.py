@@ -1,0 +1,20 @@
+"""Oracle for fused residual-add + RMSNorm (decode block boundary)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def residual_rmsnorm_ref(x, weight, residual=None, eps: float = 1e-5):
+    """x: (N, D); weight: (D,); optional residual added before the norm.
+
+    Returns ``(normed, pre_norm_sum)`` — both live in the decode trace:
+    the normed value feeds the next projection, the sum is the residual
+    stream consumed by the following block.
+    """
+    s = x if residual is None else x + residual
+    sf = s.astype(jnp.float32)
+    var = jnp.mean(jnp.square(sf), axis=-1, keepdims=True)
+    out = sf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return out.astype(x.dtype), s

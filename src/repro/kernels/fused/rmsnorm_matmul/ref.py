@@ -1,0 +1,20 @@
+"""Oracle for fused RMSNorm + projection matmul."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_matmul_ref(x, weight, w_proj, eps: float = 1e-5):
+    """x: (N, D); weight: (D,); w_proj: (D, F).
+
+    Returns ``(x_normed @ w_proj, x_normed)`` — the projection feeds one
+    dot_general consumer, the normed rows stay live because q/k/v (or
+    gate/up) projections share one norm in the decode trace.
+    """
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    normed = normed.astype(x.dtype)
+    return normed @ w_proj.astype(normed.dtype), normed

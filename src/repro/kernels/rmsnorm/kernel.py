@@ -12,7 +12,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _rms_kernel(x_ref, w_ref, r_ref, o_ref, res_ref, *, eps, has_residual):

@@ -18,12 +18,10 @@ import json
 import time
 import traceback
 
-import jax
-
 from repro.configs import ASSIGNED, SHAPES, applicable_shapes, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import build_roofline, model_flops
-from repro.launch.steps import StepOptions, build_step, params_sds
+from repro.launch.steps import StepOptions, build_step
 from repro.models import active_param_count
 
 

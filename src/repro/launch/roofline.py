@@ -17,7 +17,6 @@ Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 import re
 from collections import defaultdict

@@ -5,8 +5,10 @@
 
 Pick an execution plan with ``--plan``: the default ``jit`` serves via
 whole-step jax.jit closures; ``eager`` / ``chain`` / ``auto`` /
-``whole_graph`` route prefill/decode through the launch-plan runtime and
-report real per-step dispatch counts plus modeled TKLQT for ``--platform``.
+``whole_graph`` / ``fused`` route prefill/decode through the launch-plan
+runtime and report real per-step dispatch counts plus modeled TKLQT for
+``--platform``.  ``--plan autotuned --plan-table plan_table.json`` loads
+the measured winners written by ``repro.launch.autotune``.
 """
 from __future__ import annotations
 
@@ -32,6 +34,9 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--plan", default="jit", choices=PLAN_STRATEGIES)
+    ap.add_argument("--plan-table", default=None,
+                    help="plan_table.json from repro.launch.autotune "
+                         "(required with --plan autotuned)")
     ap.add_argument("--platform", default="TPU-v5e",
                     choices=sorted(PLATFORMS))
     ap.add_argument("--no-warmup", action="store_true",
@@ -45,7 +50,7 @@ def main():
     params = init_params(jax.random.PRNGKey(0), cfg)
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
                       max_len=args.max_len, plan=args.plan,
-                      platform=args.platform)
+                      platform=args.platform, plan_table=args.plan_table)
 
     def make_requests():
         rng = np.random.default_rng(0)
@@ -71,6 +76,9 @@ def main():
         "decode_dispatches": st.decode_dispatches,
         "dispatches_per_decode_step": round(
             st.dispatches_per_decode_step, 2),
+        "fused_dispatches_per_decode_step": round(
+            st.fused_dispatches_per_decode_step, 2),
+        "rule_hits": dict(st.rule_hits),
         "prefill_dispatches": st.prefill_dispatches,
         "modeled_tklqt_us": round(st.modeled_tklqt_s * 1e6, 1),
         "measured_launch_tax_per_step_us": round(

@@ -7,8 +7,7 @@ configs — everything flows through ShapeDtypeStructs.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 import jax
@@ -18,7 +17,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.distributed.sharding import (
-    cache_specs, make_shd, param_specs, shardings_for, valid_spec)
+    cache_specs, make_shd, param_specs, valid_spec)
 from repro.launch.mesh import dp_axes_of, tp_axis_of
 from repro.layers.moe import MeshContext
 from repro.models import forward, init_params, loss_fn, make_cache
@@ -221,10 +220,10 @@ def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *,
             g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
             def acc(carry, mbx):
-                g, l, c, a = carry
+                g, ls, c, a = carry
                 (li, (ci, ai)), gi = grad_fn(params, mbx, cfg, **lkw)
                 g = jax.tree.map(lambda x, y: x + y.astype(jnp.float32), g, gi)
-                return (g, l + li, c + ci, a + ai), None
+                return (g, ls + li, c + ci, a + ai), None
 
             (grads, loss, ce, aux), _ = jax.lax.scan(
                 acc, (g0, 0.0, 0.0, 0.0), mbatch)
@@ -242,7 +241,8 @@ def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *,
     b_pspecs = batch_pspecs(b_sds, mesh)
     donate = opts.donate
 
-    to_sh = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t)
+    def to_sh(t):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), t)
     in_sh = (to_sh(p_specs), to_sh(o_specs), to_sh(b_pspecs))
     out_sh = (to_sh(p_specs), to_sh(o_specs),
               jax.tree.map(lambda _: NamedSharding(mesh, P()),
@@ -287,7 +287,8 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *,
         lambda: make_cache(cfg, b, s, src_len=max(el, 1)))
     p_specs = param_specs(p_sds, cfg, mesh, fsdp_experts=fsdp)
     c_specs = cache_specs(cache_sds, cfg, mesh, dp=dist.dp_axes)
-    to_sh = lambda t: jax.tree.map(lambda sp: NamedSharding(mesh, sp), t)
+    def to_sh(t):
+        return jax.tree.map(lambda sp: NamedSharding(mesh, sp), t)
     dp = dist.dp_axes
 
     if mode == "decode":

@@ -110,7 +110,7 @@ def flash_mha(q, k, v, *, scale, causal, window, cap,
         valb = jnp.ones((nk, b, block_kv), bool)
 
     def body(carry, blk):
-        m, l, acc = carry
+        m, lsum, acc = carry
         kj, vj, posj, valj = blk
         kj = _expand_kv(kj, g).astype(jnp.float32)
         vj = _expand_kv(vj, g).astype(jnp.float32)
@@ -121,9 +121,9 @@ def flash_mha(q, k, v, *, scale, causal, window, cap,
         m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
         p = jnp.exp(sc - m_new[..., None])
         alpha = jnp.exp(m - m_new)
-        l = l * alpha + jnp.sum(p, axis=-1)
+        lsum = lsum * alpha + jnp.sum(p, axis=-1)
         acc = acc * alpha[..., None] + jnp.einsum("bhst,bthd->bhsd", p, vj)
-        return (m_new, l, acc), None
+        return (m_new, lsum, acc), None
 
     m0 = jnp.full((b, hq, s), NEG_INF, jnp.float32)
     l0 = jnp.zeros((b, hq, s), jnp.float32)

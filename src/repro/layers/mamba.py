@@ -103,12 +103,14 @@ def mamba_fwd(params, x, cfg: ModelConfig, state=None):
         chunk = min(TIME_CHUNK, s)
         pad = (-s) % chunk
         if pad:
-            pf = lambda v: jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+            def pf(v):
+                return jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
             xcf_, dt_, bm_, cm_ = pf(xcf), pf(dt), pf(bm), pf(cm)
         else:
             xcf_, dt_, bm_, cm_ = xcf, dt, bm, cm
         n = xcf_.shape[1] // chunk
-        resh = lambda v: v.reshape(b, n, chunk, v.shape[-1]).swapaxes(0, 1)
+        def resh(v):
+            return v.reshape(b, n, chunk, v.shape[-1]).swapaxes(0, 1)
         xs = (resh(xcf_), resh(dt_), resh(bm_), resh(cm_))
 
         body = jax.checkpoint(functools.partial(_scan_chunk, a=a))

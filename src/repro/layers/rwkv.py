@@ -171,7 +171,8 @@ def rwkv_time_fwd(params, x, cfg: ModelConfig, state=None, shd=None):
     else:
         pad = (-s) % CHUNK
         if pad:
-            zf = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            def zf(a):
+                return jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
             r, k, v = zf(r), zf(k), zf(v)
             logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
         o, s_new = wkv_chunked(r, k, v, logw, params["u"], state["s"])

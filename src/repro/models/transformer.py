@@ -11,7 +11,6 @@ superblock axis (via vmapped init) so the scan can slice one step at a time.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional
 
 import jax

@@ -12,3 +12,5 @@ from repro.runtime.executor import (PlanExecutor, cache_stats,  # noqa: F401
 from repro.runtime.plan import LaunchPlan                       # noqa: F401
 from repro.runtime.planner import (PlanChoice, PlanEvaluation,  # noqa: F401
                                    Planner, simulate_plan)
+from repro.runtime.rules import (DEFAULT_RULES, find_matches,  # noqa: F401
+                                 fused_plan, get_rule)

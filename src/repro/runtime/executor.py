@@ -22,6 +22,7 @@ import jax.extend.core as jexc
 
 from repro.core.tracing import Trace, _is_drop, _read
 from repro.runtime.plan import LaunchPlan, segment_label
+from repro.runtime.rules import get_rule, segment_free_outs
 
 # (trace.token, plan.key(), input signature) -> [(jitted fn, free vars, outs)]
 _SEG_CACHE: OrderedDict = OrderedDict()
@@ -81,30 +82,27 @@ class PlanExecutor:
         _CACHE_STATS["misses"] += 1
 
         flat = self.trace.flat_eqns
+        rule_map = dict(self.plan.rules)
         seg_fns = []
-        for seg in self.plan.segments:
-            eqns = [flat[i] for i in seg]
+        for si, seg in enumerate(self.plan.segments):
+            eqns, free, outs = segment_free_outs(flat, seg)
 
-            # free inputs of the segment: vars read before defined inside
-            defined = set()
-            free = []
-            for eqn, invars in eqns:
-                for v in invars:
-                    base = v
-                    while isinstance(base, tuple):
-                        if base[0] == "const":
-                            base = None
-                            break
-                        base = base[1]
-                    if base is None or isinstance(base, jexc.Literal):
-                        continue
-                    if base not in defined and base not in free:
-                        free.append(base)
-                for ov in eqn.outvars:
-                    if not _is_drop(ov):
-                        defined.add(ov)
-            outs = [ov for eqn, _ in eqns for ov in eqn.outvars
-                    if not _is_drop(ov)]
+            if si in rule_map:
+                # rule-tagged segment: ONE fused kernel replaces the
+                # eqn replay (match re-bound here so cached plans stay
+                # self-describing; Pallas interprets off-TPU)
+                rule = get_rule(rule_map[si])
+                match = rule.bind(self.trace, seg[0])
+                if match is None:
+                    raise ValueError(
+                        f"plan tags segment {si} with rule "
+                        f"{rule_map[si]!r} but the trace window no "
+                        "longer matches")
+                fused_fn, outs = rule.lower(
+                    match, free,
+                    interpret=jax.default_backend() != "tpu")
+                seg_fns.append((jax.jit(fused_fn), free, outs))
+                continue
 
             def seg_fn(vals, _eqns=eqns, _free=free):
                 env = dict(zip(_free, vals))

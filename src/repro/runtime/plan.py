@@ -9,6 +9,12 @@ model prices.  Strategies:
   whole_graph  one segment for the whole jaxpr (torch.compile analogue)
   chain(L)     proximity-mined deterministic chains of length L (paper Eq. 6)
   auto         cost-aware boundaries from ``runtime.planner.Planner``
+  fused        rule windows lowered to fused Pallas kernels
+               (``runtime.rules``), remainder from a base plan
+
+``rules`` tags segments that execute as ONE fused kernel instead of an
+eqn replay: ``(segment_index, rule_name)`` pairs resolved against the
+``runtime.rules`` registry at compile time.
 """
 from __future__ import annotations
 
@@ -27,13 +33,22 @@ def segment_label(kernels: Sequence, seg: Sequence[int]) -> str:
 
 @dataclass(frozen=True)
 class LaunchPlan:
-    strategy: str                       # eager | whole_graph | chain | auto | custom
+    strategy: str                       # eager | whole_graph | chain | auto |
+                                        # fused | custom
     segments: tuple                     # tuple[tuple[int, ...], ...]
     length: Optional[int] = None        # chain length, when strategy == "chain"
+    rules: tuple = ()                   # tuple[(segment_index, rule_name)]
 
     @property
     def n_launches(self) -> int:
         return len(self.segments)
+
+    @property
+    def n_fused_rules(self) -> int:
+        return len(self.rules)
+
+    def rule_names(self) -> list:
+        return [name for _, name in self.rules]
 
     @property
     def n_kernels(self) -> int:
@@ -45,7 +60,7 @@ class LaunchPlan:
 
     def key(self) -> tuple:
         """Hashable identity used by the compiled-segment cache."""
-        return (self.strategy, self.length, self.segments)
+        return (self.strategy, self.length, self.segments, self.rules)
 
     def validate(self, n_kernels: Optional[int] = None) -> "LaunchPlan":
         """Segments must be an exact in-order cover of the kernel indices —
@@ -55,13 +70,14 @@ class LaunchPlan:
         n = n_kernels if n_kernels is not None else len(flat)
         if flat != list(range(n)):
             raise ValueError(
-                f"plan segments are not an exact in-order cover of "
+                "plan segments are not an exact in-order cover of "
                 f"range({n}): {flat[:8]}...")
         return self
 
     def describe(self) -> str:
         return (f"LaunchPlan({self.strategy}"
                 + (f", L={self.length}" if self.length else "")
+                + (f", {self.n_fused_rules} fused" if self.rules else "")
                 + f": {self.n_launches} launches / {self.n_kernels} kernels, "
                   f"max segment {self.max_segment})")
 

@@ -34,12 +34,21 @@ def simulate_plan(kernels: Sequence, plan: LaunchPlan, spec: PlatformSpec, *,
                   batch_scale: float = 1.0,
                   host_scale: Optional[Sequence[float]] = None
                   ) -> list[KernelEvent]:
-    """In-order queue model over plan segments (one launch per segment)."""
+    """In-order queue model over plan segments (one launch per segment).
+
+    Rule-tagged segments (``plan.rules``) are priced as ONE fused kernel:
+    the member flops still run, but the memory traffic collapses to the
+    widest member tensor — the fused kernel keeps intermediates in VMEM,
+    so only the segment-boundary arrays cross HBM.  Plain multi-eqn
+    segments keep the sum of member durations (XLA dispatches them as one
+    executable but the member kernels still round-trip memory).
+    """
+    rule_segs = {si for si, _ in plan.rules}
     t_host = 0.0
     device_free = 0.0
     events = []
     base_launch = spec.host_cost_ns * 1e-9
-    for seg in plan.segments:
+    for si, seg in enumerate(plan.segments):
         rel = 1.0
         if host_scale is not None and len(seg) == 1:
             # singleton segments keep this op's measured host profile;
@@ -47,9 +56,15 @@ def simulate_plan(kernels: Sequence, plan: LaunchPlan, spec: PlatformSpec, *,
             rel = max(host_scale[seg[0]], 1.0)
         launch_begin = t_host
         t_host = t_host + base_launch * rel
-        dur = sum(kernel_duration(spec, kernels[i].flops * batch_scale,
-                                  kernels[i].bytes * batch_scale)
-                  for i in seg)
+        if si in rule_segs:
+            dur = kernel_duration(
+                spec,
+                sum(kernels[i].flops for i in seg) * batch_scale,
+                max(kernels[i].bytes for i in seg) * batch_scale)
+        else:
+            dur = sum(kernel_duration(spec, kernels[i].flops * batch_scale,
+                                      kernels[i].bytes * batch_scale)
+                      for i in seg)
         start = max(t_host, device_free)
         end = start + dur
         device_free = end
@@ -124,6 +139,18 @@ class Planner:
             segs.append(cur)
         return LaunchPlan("auto", tuple(tuple(s) for s in segs)).validate(
             len(self.trace.kernels))
+
+    def fused_rules(self, lengths: Sequence[int] = DEFAULT_LENGTHS,
+                    rules: Optional[Sequence[str]] = None,
+                    verify: bool = True) -> LaunchPlan:
+        """Fusion-rule plan: verified rule windows become single fused
+        Pallas kernel launches, the remainder keeps the cost-aware auto
+        partition — the paper's 'substitute fused kernels in the
+        CPU-bound region' move, as a LaunchPlan."""
+        from repro.runtime.rules import DEFAULT_RULES, fused_plan
+        base = self.auto(lengths=lengths).plan
+        return fused_plan(self.trace, base=base,
+                          rules=rules or DEFAULT_RULES, verify=verify)
 
     # ------------------------------------------------------------ search
     def evaluate(self, plan: LaunchPlan) -> SkipReport:

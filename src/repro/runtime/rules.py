@@ -1,0 +1,425 @@
+"""Fusion-rule registry: substitute fused Pallas kernels into LaunchPlans.
+
+A ``FusionRule`` pattern-matches a contiguous eqn window in a ``Trace``
+(by primitive-name sequence, then by exact dataflow + shape checks),
+and lowers the whole window to ONE fused kernel launch from
+``repro.kernels.fused``.  ``fused_plan`` overlays verified matches onto
+any base ``LaunchPlan`` — each window becomes a single rule-tagged
+segment, and ``PlanExecutor`` dispatches the fused kernel instead of
+replaying the member eqns.  This closes the paper's loop: characterize
+the decode stream, find the CPU-bound launch-dominated windows, and
+replace multi-kernel subgraphs with fused kernels that cut both the
+launch count and the intermediate HBM traffic.
+
+Safety: a match is only substituted after a numeric-equivalence check —
+the window replay and the fused kernel run on synthetic inputs drawn
+from the window's avals and must agree within ``tol``.  Windows whose
+intermediates escape (consumed outside the window beyond what the fused
+kernel returns) are rejected at bind time, so every fused plan stays an
+exact, numerically-equivalent cover of the trace.
+
+The shipped rules target the fp32 decode hot path (reduced configs and
+CPU CI); bf16 traces interleave ``convert_element_type`` eqns and simply
+do not match — a safe no-op, never a wrong substitution.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+import jax.extend.core as jexc
+import numpy as np
+
+from repro.core.tracing import Trace, _is_drop
+from repro.runtime.plan import LaunchPlan
+
+# square .. mul is the 9-eqn RMSNorm core the decode trace emits at every
+# block boundary (fp32: the astype round trips are no-ops and elided)
+_RMSNORM_CORE = ("square", "reduce_sum", "broadcast_in_dim", "div", "add",
+                 "rsqrt", "mul", "broadcast_in_dim", "mul")
+
+DEFAULT_TOL = 1e-4
+
+
+def _base(v):
+    """Base of a rewritten invar: a jaxpr Var, a Literal, or a const value
+    wrapped as ("const", value)."""
+    while isinstance(v, tuple):
+        if v[0] == "const":
+            return v
+        v = v[1]
+    return v
+
+
+def _read_ref(env, v):
+    """Read a rewritten invar ref against a var->value env."""
+    b = _base(v)
+    if isinstance(b, jexc.Literal):
+        return b.val
+    if isinstance(b, tuple):          # ("const", value)
+        return b[1]
+    return env[b]
+
+
+def segment_free_outs(flat_eqns, seg):
+    """Free inputs and non-drop outputs of one plan segment.
+
+    Free inputs are the vars read before being defined inside the
+    segment (consts and literals excluded — they are baked into the
+    eqn invars).  Shared with ``PlanExecutor._build``.
+    """
+    eqns = [flat_eqns[i] for i in seg]
+    defined = set()
+    free = []
+    for eqn, invars in eqns:
+        for v in invars:
+            b = _base(v)
+            if isinstance(b, (tuple, jexc.Literal)):
+                continue
+            if b not in defined and b not in free:
+                free.append(b)
+        for ov in eqn.outvars:
+            if not _is_drop(ov):
+                defined.add(ov)
+    outs = [ov for eqn, _ in eqns for ov in eqn.outvars if not _is_drop(ov)]
+    return eqns, free, outs
+
+
+def live_outs(trace: Trace, start: int, stop: int) -> set:
+    """Window outvars consumed after the window or returned by the trace."""
+    window = {ov for i in range(start, stop)
+              for ov in trace.flat_eqns[i][0].outvars if not _is_drop(ov)}
+    live = set()
+    for j in range(stop, len(trace.flat_eqns)):
+        for v in trace.flat_eqns[j][1]:
+            b = _base(v)
+            if not isinstance(b, (tuple, jexc.Literal)) and b in window:
+                live.add(b)
+    for ov in trace.closed.jaxpr.outvars:
+        if isinstance(ov, jexc.Literal):
+            continue
+        b = _base(trace.env_map.get(ov, ov))
+        if b in window:
+            live.add(b)
+    return live
+
+
+@dataclass
+class RuleMatch:
+    """One verified occurrence of a rule in a trace."""
+    rule_name: str
+    start: int
+    stop: int                          # exclusive eqn index
+    inputs: dict                       # role -> rewritten invar ref
+    provides: dict                     # outvar -> fused-result index
+    eps: float
+    max_abs_err: float = float("nan")  # numeric check result (nan = unchecked)
+
+    @property
+    def indices(self) -> tuple:
+        return tuple(range(self.start, self.stop))
+
+
+def _literal_operand(invars):
+    for v in invars:
+        if isinstance(v, jexc.Literal):
+            return v
+    return None
+
+
+def _var_operands(invars):
+    return [v for v in invars if not isinstance(v, jexc.Literal)]
+
+
+@dataclass(frozen=True)
+class RMSNormRule:
+    """The RMSNorm window family: plain norm, residual+norm, norm+matmul.
+
+    ``residual`` prepends the block-boundary ``add``; ``matmul`` appends
+    the projection ``dot_general``.  All three lower to the fused Pallas
+    kernels in ``repro.kernels.fused`` (interpret mode off-TPU).
+    """
+    name: str
+    residual: bool = False
+    matmul: bool = False
+
+    @property
+    def pattern(self) -> tuple:
+        pat = _RMSNORM_CORE
+        if self.residual:
+            pat = ("add",) + pat
+        if self.matmul:
+            pat = pat + ("dot_general",)
+        return pat
+
+    # ------------------------------------------------------------ bind
+    def bind(self, trace: Trace, start: int) -> Optional[RuleMatch]:
+        flat = trace.flat_eqns
+        stop = start + len(self.pattern)
+        if stop > len(flat):
+            return None
+        eqns = [flat[i] for i in range(start, stop)]
+        if tuple(e.primitive.name for e, _ in eqns) != self.pattern:
+            return None
+
+        off = 1 if self.residual else 0
+        (sq, rs, bc1, dv, ad, rq, m1, bc2, m2) = eqns[off:off + 9]
+
+        def out(e):
+            return e[0].outvars[0]
+
+        x_ref = sq[1][0]
+        x_b = _base(x_ref)
+        if isinstance(x_b, jexc.Literal):
+            return None
+        x_aval = sq[0].invars[0].aval
+        if len(x_aval.shape) < 1:
+            return None
+        d = x_aval.shape[-1]
+        axis = len(x_aval.shape) - 1
+
+        # the norm core must be one connected chain over the last axis
+        if rs[0].params.get("axes") != (axis,):
+            return None
+        if _base(rs[1][0]) is not out(sq):
+            return None
+        if _base(bc1[1][0]) is not out(rs):
+            return None
+        # div is non-commutative: the sum must be the dividend and the
+        # literal D the divisor (sum/D = mean, never D/sum)
+        if _base(dv[1][0]) is not out(bc1):
+            return None
+        lit_d = dv[1][1] if isinstance(dv[1][1], jexc.Literal) else None
+        if lit_d is None or float(lit_d.val) != float(d):
+            return None
+        lit_eps = _literal_operand(ad[1])
+        if lit_eps is None:
+            return None
+        if not any(_base(v) is out(dv) for v in ad[1]):
+            return None
+        if _base(rq[1][0]) is not out(ad):
+            return None
+        m1_bases = [_base(v) for v in _var_operands(m1[1])]
+        if out(rq) not in m1_bases or x_b not in m1_bases:
+            return None
+        w_ref = bc2[1][0]
+        w_aval = bc2[0].invars[0].aval
+        if tuple(w_aval.shape) != (d,):
+            return None
+        if bc2[0].params.get("broadcast_dimensions") != (axis,):
+            return None
+        m2_bases = [_base(v) for v in _var_operands(m2[1])]
+        if out(m1) not in m2_bases or out(bc2) not in m2_bases:
+            return None
+
+        inputs = {"x": x_ref, "weight": w_ref}
+        provides = {out(m2): 0}
+
+        if self.residual:
+            add0 = eqns[0]
+            if out(add0) is not x_b:
+                return None
+            a_ref, b_ref = add0[1][0], add0[1][1]
+            for v, ref in ((add0[0].invars[0], a_ref),
+                           (add0[0].invars[1], b_ref)):
+                if isinstance(_base(ref), jexc.Literal):
+                    return None
+                if tuple(v.aval.shape) != tuple(x_aval.shape):
+                    return None
+            inputs = {"x": a_ref, "residual": b_ref, "weight": w_ref}
+            # fused result order: (normed, pre-norm sum)
+            provides = {out(m2): 0, out(add0): 1}
+
+        if self.matmul:
+            dot = eqns[-1]
+            dims = dot[0].params.get("dimension_numbers")
+            if dims != (((axis,), (0,)), ((), ())):
+                return None
+            if _base(dot[1][0]) is not out(m2):
+                return None
+            p_ref = dot[1][1]
+            p_aval = dot[0].invars[1].aval
+            if len(p_aval.shape) != 2 or p_aval.shape[0] != d:
+                return None
+            inputs["w_proj"] = p_ref
+            # fused result order: (projection, normed)
+            provides = {out(dot): 0, out(m2): 1}
+
+        # every escaping intermediate must be one the kernel returns
+        if not live_outs(trace, start, stop) <= set(provides):
+            return None
+        return RuleMatch(self.name, start, stop, inputs, provides,
+                         eps=float(lit_eps.val))
+
+    # ------------------------------------------------------------ lower
+    def lower(self, match: RuleMatch, free: Sequence, interpret: bool = True):
+        """Fused callable over the segment's free-var values, plus the
+        ordered outvars it defines (``PlanExecutor`` seg_fn contract)."""
+        from repro.kernels.fused import residual_rmsnorm, rmsnorm_matmul
+
+        inputs, eps = match.inputs, match.eps
+        outs = sorted(match.provides, key=match.provides.get)
+        idx = [match.provides[o] for o in outs]
+        residual, matmul = self.residual, self.matmul
+
+        def fused_fn(vals, _free=tuple(free)):
+            env = dict(zip(_free, vals))
+            x = _read_ref(env, inputs["x"])
+            w = _read_ref(env, inputs["weight"])
+            if matmul:
+                res = rmsnorm_matmul(x, w, _read_ref(env, inputs["w_proj"]),
+                                     eps=eps, interpret=interpret)
+            elif residual:
+                res = residual_rmsnorm(x, w,
+                                       _read_ref(env, inputs["residual"]),
+                                       eps=eps, interpret=interpret)
+            else:
+                res = residual_rmsnorm(x, w, eps=eps, interpret=interpret)
+            return [res[i] for i in idx]
+
+        return fused_fn, outs
+
+
+# priority order: longest window first, residual before bare norm
+REGISTRY = {
+    "rmsnorm_matmul": RMSNormRule("rmsnorm_matmul", matmul=True),
+    "residual_rmsnorm": RMSNormRule("residual_rmsnorm", residual=True),
+    "rmsnorm": RMSNormRule("rmsnorm"),
+}
+DEFAULT_RULES = tuple(REGISTRY)
+
+
+def get_rule(name: str):
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown fusion rule {name!r}; "
+                       f"registered: {sorted(REGISTRY)}") from None
+
+
+# per-(rule, window signature) numeric-check cache: binding is structural,
+# so one verified signature covers every repetition across layers
+_VERIFY_CACHE: dict = {}
+
+
+def _window_signature(trace: Trace, match: RuleMatch, free) -> tuple:
+    avals = tuple((tuple(getattr(v, "aval", None).shape),
+                   str(getattr(v, "aval", None).dtype))
+                  if hasattr(v, "aval") else ("const",) for v in free)
+    return (match.rule_name, match.eps, avals)
+
+
+def verify_match(trace: Trace, match: RuleMatch) -> float:
+    """Numeric equivalence: window replay vs fused kernel on synthetic
+    inputs drawn from the free-var avals.  Returns max abs error over the
+    provided outputs; cached per window signature."""
+    seg = match.indices
+    eqns, free, _ = segment_free_outs(trace.flat_eqns, seg)
+    key = _window_signature(trace, match, free)
+    if key in _VERIFY_CACHE:
+        return _VERIFY_CACHE[key]
+
+    rng = np.random.default_rng(0)
+    vals = []
+    for v in free:
+        aval = v.aval
+        if np.issubdtype(np.dtype(aval.dtype), np.floating):
+            sample = rng.standard_normal(aval.shape)
+        else:
+            sample = np.ones(aval.shape)
+        vals.append(jax.numpy.asarray(sample.astype(aval.dtype)))
+
+    env = dict(zip(free, vals))
+    for eqn, invars in eqns:
+        invals = [_read_ref(env, v) for v in invars]
+        out = eqn.primitive.bind(*invals, **eqn.params)
+        if not eqn.primitive.multiple_results:
+            out = [out]
+        for ov, o in zip(eqn.outvars, out):
+            if not _is_drop(ov):
+                env[ov] = o
+
+    rule = get_rule(match.rule_name)
+    fused_fn, outs = rule.lower(match, free)
+    fused = fused_fn(vals)
+    err = 0.0
+    for ov, o in zip(outs, fused):
+        ref = np.asarray(env[ov], np.float64)
+        err = max(err, float(np.max(np.abs(ref - np.asarray(o, np.float64)))))
+    _VERIFY_CACHE[key] = err
+    match.max_abs_err = err
+    return err
+
+
+def find_matches(trace: Trace, rules: Sequence[str] = DEFAULT_RULES, *,
+                 verify: bool = True, tol: float = DEFAULT_TOL) -> list:
+    """Non-overlapping rule matches, scanned left to right with the
+    registry's priority order at each position.  With ``verify`` (the
+    default) every match must pass its numeric-equivalence check."""
+    names = trace.kernel_names
+    matched: list = []
+    pos = 0
+    while pos < len(names):
+        hit = None
+        for rn in rules:
+            rule = get_rule(rn)
+            if names[pos] != rule.pattern[0]:
+                continue
+            m = rule.bind(trace, pos)
+            if m is None:
+                continue
+            if verify:
+                err = verify_match(trace, m)
+                m.max_abs_err = err
+                if not (err <= tol):
+                    continue
+            hit = m
+            break
+        if hit is not None:
+            matched.append(hit)
+            pos = hit.stop
+        else:
+            pos += 1
+    return matched
+
+
+def fused_plan(trace: Trace, base: Optional[LaunchPlan] = None,
+               rules: Sequence[str] = DEFAULT_RULES, *,
+               verify: bool = True, tol: float = DEFAULT_TOL,
+               matches: Optional[list] = None) -> LaunchPlan:
+    """Overlay rule windows onto ``base`` (default: eager).
+
+    Every matched window becomes one rule-tagged segment; base segments
+    are split around the windows, so the result remains an exact
+    in-order cover and the plan stays numerically equivalent.
+    """
+    n = len(trace.kernels)
+    if base is None:
+        base = LaunchPlan.eager(n)
+    if matches is None:
+        matches = find_matches(trace, rules, verify=verify, tol=tol)
+    window_of = {}
+    for m in matches:
+        for i in m.indices:
+            window_of[i] = m
+    segments: list = []
+    plan_rules: list = []
+    cur: list = []
+    for seg in base.segments:
+        for i in seg:
+            m = window_of.get(i)
+            if m is None:
+                cur.append(i)
+                continue
+            if cur:
+                segments.append(tuple(cur))
+                cur = []
+            if i == m.start:
+                plan_rules.append((len(segments), m.rule_name))
+                segments.append(m.indices)
+        if cur:
+            segments.append(tuple(cur))
+            cur = []
+    return LaunchPlan("fused", tuple(segments),
+                      rules=tuple(plan_rules)).validate(n)

@@ -42,8 +42,8 @@ def classify_measured_sweep(batches: Sequence[int],
     if launch_tax_s is None:
         launch_tax_s = [0.0] * len(step_times_s)
     reports = [
-        _MeasuredReport(t, max(0.0, 1.0 - (l / t)) if t > 0 else 0.0)
-        for t, l in zip(step_times_s, launch_tax_s)
+        _MeasuredReport(t, max(0.0, 1.0 - (tax / t)) if t > 0 else 0.0)
+        for t, tax in zip(step_times_s, launch_tax_s)
     ]
     return classify_sweep(batches, reports)
 
@@ -62,6 +62,8 @@ class MeasuredPoint:
     mean_occupancy: float
     tokens_out: int
     decode_steps: int
+    fused_dispatches_per_decode_step: float = 0.0  # rule-backed fused kernels
+    rule_hits: dict = field(default_factory=dict)  # fusion-rule launch counts
     spans: list = field(default_factory=list)           # telemetry Spans
     modeled_events: list = field(default_factory=list)  # one decode step
     decode_anchors: list = field(default_factory=list)  # decode span starts
@@ -75,6 +77,9 @@ class MeasuredPoint:
             "decode_launch_tax_us": round(self.decode_launch_tax_s * 1e6, 1),
             "dispatches_per_decode_step":
                 round(self.dispatches_per_decode_step, 2),
+            "fused_dispatches_per_decode_step":
+                round(self.fused_dispatches_per_decode_step, 2),
+            "rule_hits": dict(self.rule_hits),
             "modeled_tklqt_us": round(self.modeled_tklqt_s * 1e6, 1),
             "tokens_per_s": round(self.tokens_per_s, 1),
             "mean_occupancy": round(self.mean_occupancy, 2),
@@ -143,6 +148,8 @@ def run_point(cfg, params, workload: Workload, *, batch: int,
         launch_tax_per_step_s=st.launch_tax_per_step_s,
         decode_launch_tax_s=st.launch_tax_per_decode_step_s,
         dispatches_per_decode_step=st.dispatches_per_decode_step,
+        fused_dispatches_per_decode_step=st.fused_dispatches_per_decode_step,
+        rule_hits=dict(st.rule_hits),
         modeled_tklqt_s=st.modeled_tklqt_s,
         tokens_per_s=st.tokens_out / eng.now if eng.now else 0.0,
         mean_occupancy=(sum(st.slot_occupancy) / len(st.slot_occupancy)
@@ -180,7 +187,7 @@ def characterize(cfg, params, *, scenario: str = "chatbot",
         raise ValueError(
             f"workload was recorded for vocab_size={workload.vocab_size} "
             f"but model {cfg.name} has vocab_size={cfg.vocab_size}; "
-            f"re-record the trace against this config")
+            "re-record the trace against this config")
     points = [run_point(cfg, params, workload, batch=b, plan=plan,
                         platform=platform, max_len=max_len, warmup=warmup)
               for b in batches]

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import collections
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import jax
@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import ModelConfig
-from repro.data.pipeline import DataConfig, Pipeline, make_batch
+from repro.data.pipeline import DataConfig, Pipeline
 from repro.models import init_params, loss_fn
 from repro.training.optim import OptConfig, opt_init, opt_update
 

@@ -4,9 +4,7 @@ clipping and cosine schedule.  Pure pytree transforms, no external deps.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -50,7 +48,8 @@ def clip_by_global_norm(grads, max_norm):
 
 # ------------------------------------------------------------------ adamw
 def adamw_init(params):
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {"step": jnp.zeros((), jnp.int32),
             "m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params)}

@@ -64,7 +64,7 @@ class Scenario:
                              f"got {self.rate_rps}")
         if self.arrival == "bursty":
             if not self.burst_s > 0:
-                raise ValueError(f"bursty arrivals need burst_s > 0, "
+                raise ValueError("bursty arrivals need burst_s > 0, "
                                  f"got {self.burst_s}")
             if self.idle_s < 0:
                 raise ValueError(f"idle_s must be >= 0, got {self.idle_s}")

@@ -161,7 +161,8 @@ def test_wkv6_matches_model_chunked():
     s0 = jax.random.normal(ks[5], (B, H, hd, hd)) * 0.1
     o_model, s_model = wkv_chunked(r, k, v, logw, u, s0, chunk=16)
     # kernel uses (B,H,T,hd) layout
-    tr = lambda x: x.transpose(0, 2, 1, 3)
+    def tr(x):
+        return x.transpose(0, 2, 1, 3)
     o_kern, s_kern = wkv6(tr(r), tr(k), tr(v), tr(logw), u, s0, chunk=16)
     np.testing.assert_allclose(np.asarray(tr(o_kern)), np.asarray(o_model),
                                atol=5e-4, rtol=1e-3)

@@ -5,10 +5,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config, reduced
-from repro.configs.base import MoEConfig
 from repro.layers.moe import (
     capacity, dispatch_slots, moe_dense_fwd, moe_init, moe_local_fwd, route)
 

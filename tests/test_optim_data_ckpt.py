@@ -24,7 +24,8 @@ def test_optimizer_reduces_quadratic(kind):
     init = adamw_init if kind == "adamw" else adafactor_init
     upd = adamw_update if kind == "adamw" else adafactor_update
     state = init(w)
-    loss = lambda p: sum(jnp.sum(x ** 2) for x in jax.tree.leaves(p))
+    def loss(p):
+        return sum(jnp.sum(x ** 2) for x in jax.tree.leaves(p))
     l0 = float(loss(w))
     for _ in range(50):
         g = jax.grad(loss)(w)

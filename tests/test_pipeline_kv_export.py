@@ -6,7 +6,6 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core.device_model import PLATFORMS, simulate

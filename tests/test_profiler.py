@@ -1,12 +1,11 @@
 """SKIP profiler: tracing exactness, queue-sim invariants, TKLQT closed
 forms, boundedness inflection, proximity mining (Eqs. 6-8), chain-jit."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 from _hypothesis_compat import given, settings, st
 
 from repro.core.boundedness import find_inflection
-from repro.core.device_model import PLATFORMS, PlatformSpec, simulate
+from repro.core.device_model import PlatformSpec, simulate
 from repro.core.metrics import report
 from repro.core.proximity import fusion_segments, mine_chains
 from repro.core.skip import SKIP

@@ -4,7 +4,6 @@ serving engine's plan-aware dispatch accounting."""
 import math
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

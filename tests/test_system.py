@@ -2,7 +2,6 @@
 correctness under continuous batching, SKIP-on-model integration."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.data.pipeline import DataConfig

@@ -35,6 +35,7 @@ BENCHES = [
     ("roofline", "benchmarks.bench_roofline"),            # beyond paper
     ("characterize", "benchmarks.bench_characterize"),    # measured serving
     ("fused_decode", "benchmarks.bench_fused_decode"),    # fusion rules
+    ("paged_decode", "benchmarks.bench_paged_decode"),    # paged KV cache
 ]
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines.json")

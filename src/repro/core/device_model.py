@@ -34,6 +34,13 @@ class PlatformSpec:
     op_tax_ns: float = 6000.0
     mxu_efficiency: float = 0.4    # attainable fraction of peak for GEMMs
     bw_efficiency: float = 0.7
+    # host<->device coupling fabric (the LC-vs-CC axis): sustained one-way
+    # bandwidth of the link KV blocks cross when offloaded to host memory
+    # (PCIe for LC parts, NVLink-C2C for CC parts) plus a per-transfer
+    # latency floor.  This prices the paged-KV offload tier.
+    link_bw: float = 32e9          # bytes/s, one direction
+    link_lat_s: float = 10e-6      # per-transfer setup latency
+    link_efficiency: float = 0.8   # attainable fraction of peak link bw
 
     @property
     def host_cost_ns(self) -> float:
@@ -44,18 +51,25 @@ class PlatformSpec:
 # op_tax = 6 us reference (Xeon 8468V) / relative single-thread perf
 # (EPYC 7313 ~0.9x, Grace Neoverse-V2 ~0.4x per the paper's observations).
 PLATFORMS = {
-    # LC: AMD EPYC 7313 + A100-SXM4-80GB (312 TF fp16 dense, 2.04 TB/s)
+    # LC: AMD EPYC 7313 + A100-SXM4-80GB (312 TF fp16 dense, 2.04 TB/s);
+    # host link PCIe Gen4 x16 (~32 GB/s/dir)
     "AMD+A100": PlatformSpec("AMD+A100", "LC", 2260.5, 1440.0,
-                             312e12, 2.039e12, op_tax_ns=6650.0),
-    # LC: 2P Xeon 8468V + H100 PCIe (756 TF fp16 dense, 2.0 TB/s)
+                             312e12, 2.039e12, op_tax_ns=6650.0,
+                             link_bw=32e9),
+    # LC: 2P Xeon 8468V + H100 PCIe (756 TF fp16 dense, 2.0 TB/s);
+    # host link PCIe Gen5 x16 (~64 GB/s/dir)
     "Intel+H100": PlatformSpec("Intel+H100", "LC", 2374.6, 1235.2,
-                               756e12, 2.0e12, op_tax_ns=6000.0),
-    # CC: GH200 (Grace + H100-SXM-class 96GB HBM3, ~990 TF fp16, 3.35 TB/s)
+                               756e12, 2.0e12, op_tax_ns=6000.0,
+                               link_bw=64e9),
+    # CC: GH200 (Grace + H100-SXM-class 96GB HBM3, ~990 TF fp16, 3.35 TB/s);
+    # host link NVLink-C2C (~450 GB/s/dir) with a much lower setup latency
     "GH200": PlatformSpec("GH200", "CC", 2771.6, 1171.2,
-                          989e12, 3.35e12, op_tax_ns=15000.0),
-    # the TPU target of this repo (per chip)
+                          989e12, 3.35e12, op_tax_ns=15000.0,
+                          link_bw=450e9, link_lat_s=2e-6),
+    # the TPU target of this repo (per chip); PCIe-attached host
     "TPU-v5e": PlatformSpec("TPU-v5e", "CC", 2500.0, 1200.0,
-                            197e12, 819e9, op_tax_ns=6000.0),
+                            197e12, 819e9, op_tax_ns=6000.0,
+                            link_bw=32e9),
 }
 
 
@@ -83,6 +97,23 @@ class KernelEvent:
     @property
     def duration(self) -> float:
         return self.kernel_end - self.kernel_start
+
+
+def offload_cost_s(platform: PlatformSpec, nbytes: float,
+                   transfers: int = 1) -> float:
+    """Modeled host<->device transfer time for ``nbytes`` of KV blocks
+    crossing the coupling fabric in ``transfers`` separate copies.
+
+    This is the offload tax the paged KV cache pays per eviction/restore:
+    a per-transfer latency floor (PCIe doorbell / C2C handshake) plus the
+    bytes over the sustained link bandwidth.  LC (PCIe) and CC (C2C)
+    platforms differ by an order of magnitude here — the axis the paper's
+    coupling story predicts should dominate the offload/recompute tradeoff.
+    """
+    if nbytes < 0:
+        raise ValueError(f"nbytes must be >= 0, got {nbytes}")
+    return (transfers * platform.link_lat_s
+            + nbytes / (platform.link_bw * platform.link_efficiency))
 
 
 def kernel_duration(platform: PlatformSpec, flops: float, bts: float) -> float:

@@ -18,6 +18,16 @@ serving hot path, the paper's serving-time story.
 ``plan="autotuned"`` resolves the concrete strategy from a persisted
 plan table (``repro.runtime.autotune``) keyed by this engine's slot
 count — the measured characterize -> autotune -> serve loop.
+
+KV caches: ``cache="contiguous"`` (default) pre-carves one ``max_len``
+KV region per slot.  ``cache="paged"`` replaces it with the block-table
+paged allocator of ``repro.kvcache``: fixed-size token pages from one
+pool, chunked prefill (long prompts no longer monopolize the engine),
+an evict-or-preempt policy under pool pressure (``offload="host"``
+stages cold blocks in host memory priced by the platform's coupling
+link; ``offload="none"`` discards and recomputes on resume), and
+``EngineStats`` counters for pool utilization / preemptions / offload
+traffic.
 """
 from __future__ import annotations
 
@@ -37,6 +47,8 @@ from repro.telemetry.metrics import RequestTiming
 
 PLAN_STRATEGIES = ("jit", "eager", "whole_graph", "chain", "auto", "fused",
                    "autotuned")
+CACHE_MODES = ("contiguous", "paged")
+OFFLOAD_MODES = ("none", "host")
 
 
 @dataclass
@@ -47,6 +59,20 @@ class Request:
     arrival_s: float = 0.0         # offset on the engine clock (open loop)
     generated: list = field(default_factory=list)
     done: bool = False
+    status: str = "queued"         # queued|active|preempted|done|rejected
+
+
+@dataclass
+class _PrefillTask:
+    """One in-flight (chunked) prefill: tokens left to write into the
+    paged cache for a slot.  ``replay=True`` rebuilds KV for a preempted
+    request (prompt + already-emitted tokens) without emitting anything."""
+    req: Request
+    slot: int
+    toks: list
+    pos: int = 0                   # tokens already written
+    replay: bool = False
+    last_logits: Optional[jax.Array] = None
 
 
 @dataclass
@@ -65,6 +91,16 @@ class EngineStats:
     measured_dispatch_s: float = 0.0  # measured host launch tax (all steps)
     decode_dispatch_time_s: float = 0.0  # measured launch tax, decode only
     step_times_s: list = field(default_factory=list)  # decode step durations
+    # ---- paged KV cache (cache="paged"; zero/empty under contiguous)
+    rejected: int = 0              # admit() guard: plen + budget > max_len
+    preemptions: int = 0           # slots evicted under block-pool pressure
+    prefill_chunks: int = 0        # chunked-prefill segments executed
+    offload_bytes: int = 0         # measured KV bytes evicted to host tier
+    restore_bytes: int = 0         # measured KV bytes restored from host
+    offload_transfers: int = 0     # block DMAs (evict + restore directions)
+    modeled_offload_tax_s: float = 0.0  # transfers priced over the coupling
+                                        # link (core.device_model PCIe/C2C)
+    block_pool_utilization: list = field(default_factory=list)  # per step
     # single source of truth for per-request latency: rid -> RequestTiming
     # (ttft_s/e2e_s/itl_samples_s below are derived views)
     timings: dict = field(default_factory=dict)
@@ -102,6 +138,15 @@ class EngineStats:
     def mean_itl_s(self) -> float:
         itl = self.itl_samples_s
         return sum(itl) / len(itl) if itl else 0.0
+
+    @property
+    def mean_block_pool_utilization(self) -> float:
+        u = self.block_pool_utilization
+        return sum(u) / len(u) if u else 0.0
+
+    @property
+    def peak_block_pool_utilization(self) -> float:
+        return max(self.block_pool_utilization, default=0.0)
 
     @property
     def launch_tax_per_step_s(self) -> float:
@@ -185,13 +230,30 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  max_len: int = 256, greedy: bool = True,
                  plan: str = "jit", platform: str = "TPU-v5e",
-                 plan_table=None, telemetry=None):
+                 plan_table=None, telemetry=None,
+                 cache: str = "contiguous", block_size: int = 16,
+                 num_blocks: Optional[int] = None, offload: str = "none",
+                 prefill_chunk: Optional[int] = None):
         if plan not in PLAN_STRATEGIES:
             raise ValueError(f"unknown plan {plan!r}; "
                              f"expected one of {PLAN_STRATEGIES}")
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch} "
                              "(an engine with no slots can never admit)")
+        if cache not in CACHE_MODES:
+            raise ValueError(f"unknown cache {cache!r}; "
+                             f"expected one of {CACHE_MODES}")
+        if offload not in OFFLOAD_MODES:
+            raise ValueError(f"unknown offload {offload!r}; "
+                             f"expected one of {OFFLOAD_MODES}")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if cache != "paged" and (offload != "none"
+                                 or prefill_chunk is not None):
+            raise ValueError(
+                "offload= and prefill_chunk= need cache='paged' (the "
+                "contiguous cache has no blocks to evict or chunk over)")
         if plan == "autotuned":
             # measured plan table (runtime.autotune): the strategy the
             # autotuner benchmarked best for this slot count
@@ -226,8 +288,28 @@ class ServeEngine:
         self.params = params
         self.B = max_batch
         self.T = max_len
-        self.cache = make_cache(cfg, max_batch, max_len, src_len=1,
-                                dtype=cfg.cdtype)
+        self.cache_mode = cache
+        self.prefill_chunk = prefill_chunk
+        if cache == "paged":
+            from repro.kvcache import (HostOffloadTier, PagedKVCache,
+                                       default_num_blocks)
+            nb = default_num_blocks(max_batch, max_len, block_size,
+                                    num_blocks)
+            self.kv = PagedKVCache(cfg, num_blocks=nb,
+                                   block_size=block_size, max_len=max_len,
+                                   dtype=cfg.cdtype)
+            self.cache = self.kv.make_pages()
+            self.offload_tier = (HostOffloadTier(platform)
+                                 if offload == "host" else None)
+        else:
+            self.kv = None
+            self.offload_tier = None
+            self.cache = make_cache(cfg, max_batch, max_len, src_len=1,
+                                    dtype=cfg.cdtype)
+        self._prefill_tasks: dict = {}      # slot -> _PrefillTask
+        self._preempted: list = []          # evicted Requests awaiting resume
+        self._admit_seq = 0                 # victim ordering (youngest first)
+        self._last_step_progressed = True
         self.lengths = np.zeros(max_batch, np.int32)
         self.slots: list[Optional[Request]] = [None] * max_batch
         self.stats = EngineStats(plan=self.plan_label)
@@ -263,12 +345,35 @@ class ServeEngine:
                                         lengths=lengths, unroll=unroll)
             return logits[:, 0], cache2
 
+        def paged_prefill_body(params, cache, tokens, bt_row, t0,
+                               unroll=False):
+            # tokens: (1, C) one chunk; bt_row: (NB,) the slot's block
+            # table; t0: chunk start offset (traced — one compile per
+            # chunk LENGTH, not per position)
+            logits, _, cache2 = forward(params, tokens, cfg, cache=cache,
+                                        cache_index=t0,
+                                        block_tables=bt_row[None],
+                                        unroll=unroll)
+            return logits[:, -1], cache2
+
+        def paged_decode_body(params, cache, tokens, lengths, block_tables,
+                              unroll=False):
+            logits, _, cache2 = forward(params, tokens, cfg, cache=cache,
+                                        lengths=lengths,
+                                        block_tables=block_tables,
+                                        unroll=unroll)
+            return logits[:, 0], cache2
+
         self._prefill = jax.jit(prefill_body, static_argnames=("plen",))
         self._decode = jax.jit(decode_body)
+        self._prefill_paged = jax.jit(paged_prefill_body)
+        self._decode_paged = jax.jit(paged_decode_body)
         # planned modes trace with unroll=True: the unrolled layer stack
         # gives the periodic kernel stream proximity mining feeds on
         self._prefill_body = prefill_body
         self._decode_body = decode_body
+        self._paged_prefill_body = paged_prefill_body
+        self._paged_decode_body = paged_decode_body
 
     # ------------------------------------------------------------ internals
     @property
@@ -302,10 +407,22 @@ class ServeEngine:
 
     # ------------------------------------------------------------ api
     def admit(self, req: Request) -> bool:
+        plen = len(req.prompt)
+        if plen + req.max_new_tokens > self.T:
+            # the full generation cannot fit the KV region: answer with a
+            # rejection instead of letting prefill/decode writes clamp or
+            # drop out of bounds (silently corrupted attention)
+            req.done = True
+            req.status = "rejected"
+            self.stats.rejected += 1
+            self.timings.setdefault(
+                req.rid, RequestTiming(req.rid, arrival_s=req.arrival_s))
+            return True
+        if self.cache_mode == "paged":
+            return self._admit_paged(req)
         slot = self._free_slot()
         if slot is None:
             return False
-        plen = len(req.prompt)
         bucket = self._bucket(plen)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :plen] = req.prompt
@@ -344,8 +461,10 @@ class ServeEngine:
         if len(req.generated) >= req.max_new_tokens:
             # single-token budget: done at prefill, never occupies a slot
             req.done = True
+            req.status = "done"
             timing.done_s = self.now
         else:
+            req.status = "active"
             self.slots[slot] = req
             self.lengths[slot] = plen
         if self.telemetry is not None:
@@ -356,8 +475,290 @@ class ServeEngine:
                     self._planned_prefill[(bucket, plen)], t_begin)
         return True
 
+    # ------------------------------------------------------------ paged api
+    def _admit_paged(self, req: Request) -> bool:
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        resume = getattr(req, "_resume", None)
+        if resume is not None and resume[0] == "host":
+            return self._restore_from_host(req, slot, resume[1])
+        toks = list(req.prompt)
+        replay = False
+        if resume is not None:
+            # recompute-on-resume: rebuild KV by re-prefilling the prompt
+            # plus everything already emitted EXCEPT the last token — that
+            # one is the next decode step's input, exactly the state the
+            # uninterrupted run would be in (greedy decode then continues
+            # byte-identically).  A request preempted mid-prefill has
+            # emitted nothing: it re-prefills normally (replay=False) and
+            # still gets its first token at completion.
+            toks = list(req.prompt) + list(req.generated[:-1])
+            replay = len(req.generated) > 0
+        req._resume = None
+        req.status = "active"
+        req._admit_seq = self._admit_seq
+        self._admit_seq += 1
+        self.slots[slot] = req
+        self.lengths[slot] = 0
+        self._prefill_tasks[slot] = _PrefillTask(
+            req=req, slot=slot, toks=toks, replay=replay)
+        return True
+
+    def _restore_from_host(self, req: Request, slot: int,
+                           entries: int) -> bool:
+        n_blocks = self.offload_tier.stored_blocks(req.rid)
+        if not self.kv.pool.can_alloc(n_blocks):
+            return False                   # wait for blocks to free
+        host_leaves, n_blocks, nbytes, tax = \
+            self.offload_tier.restore(req.rid)
+        ids = self.kv.pool.alloc(req.rid, n_blocks)
+        self.cache = self.kv.scatter_host(self.cache, ids, host_leaves)
+        self.stats.restore_bytes += nbytes
+        self.stats.offload_transfers += max(n_blocks, 1)
+        self.stats.modeled_offload_tax_s += tax
+        req._resume = None
+        req.status = "active"
+        req._admit_seq = self._admit_seq
+        self._admit_seq += 1
+        self.slots[slot] = req
+        self.lengths[slot] = entries
+        return True
+
+    def _pick_victim(self, exclude: int) -> Optional[int]:
+        """Youngest decode-phase slot (latest admitted): it has the least
+        sunk prefill/decode work to lose — vLLM's preemption order.  When
+        every other slot is still prefilling, the youngest in-flight
+        prefill is the last-resort victim (its partial KV is discarded,
+        not offloaded — re-prefilling it is cheap)."""
+        decode = [i for i, s in enumerate(self.slots)
+                  if s is not None and i != exclude
+                  and i not in self._prefill_tasks]
+        if decode:
+            return max(decode, key=lambda i: self.slots[i]._admit_seq)
+        prefills = [i for i in self._prefill_tasks
+                    if i != exclude and self.slots[i] is not None]
+        if prefills:
+            return max(prefills, key=lambda i: self.slots[i]._admit_seq)
+        return None
+
+    def _preempt(self, slot: int) -> None:
+        req = self.slots[slot]
+        entries = int(self.lengths[slot])
+        ids = self.kv.pool.owned(req.rid)
+        mid_prefill = self._prefill_tasks.pop(slot, None) is not None
+        if self.offload_tier is not None and not mid_prefill:
+            host = self.kv.gather_host(self.cache, ids)
+            nbytes, tax = self.offload_tier.evict(req.rid, host, len(ids))
+            self.stats.offload_bytes += nbytes
+            self.stats.offload_transfers += max(len(ids), 1)
+            self.stats.modeled_offload_tax_s += tax
+            req._resume = ("host", entries)
+        else:
+            req._resume = ("recompute", None)
+        freed = self.kv.pool.free(req.rid)
+        self.cache = self.kv.zero_pages(self.cache, freed)
+        self.slots[slot] = None
+        self.lengths[slot] = 0
+        req.status = "preempted"
+        self._preempted.append(req)
+        self.stats.preemptions += 1
+
+    def _ensure_paged_blocks(self, req: Request, n_tokens: int,
+                             exclude: int) -> bool:
+        """Grow ``req`` to cover ``n_tokens`` KV entries, preempting
+        youngest-first victims while the pool is short (evict-or-preempt).
+        False = stalled: no victim available, caller retries next step."""
+        pool = self.kv.pool
+        while (pool.blocks_for(n_tokens) - len(pool.owned(req.rid))
+               > pool.free_blocks):
+            victim = self._pick_victim(exclude)
+            if victim is None:
+                return False
+            self._preempt(victim)
+        pool.ensure(req.rid, n_tokens)
+        return True
+
+    def _release_slot(self, slot: int, req: Request) -> None:
+        self.slots[slot] = None
+        self.lengths[slot] = 0
+        freed = self.kv.pool.free(req.rid)
+        self.cache = self.kv.zero_pages(self.cache, freed)
+        if self.offload_tier is not None:
+            self.offload_tier.drop(req.rid)
+
+    def _run_prefill_chunk(self, task: _PrefillTask, chunk_len: int) -> None:
+        toks = np.asarray([task.toks[task.pos:task.pos + chunk_len]],
+                          np.int32)
+        bt = jnp.asarray(self.kv.table_row(task.req.rid))
+        t0c = jnp.asarray(task.pos, jnp.int32)
+        t_start = time.perf_counter()
+        if self.plan == "jit":
+            logits, self.cache = self._prefill_paged(
+                self.params, self.cache, jnp.asarray(toks), bt, t0c)
+            self.stats.prefill_dispatches += 1
+            self.stats.measured_dispatch_s += time.perf_counter() - t_start
+        else:
+            pf = self._planned_prefill.get(("paged", chunk_len))
+            if pf is None:
+                fn = functools.partial(self._paged_prefill_body, unroll=True)
+                pf = _PlannedFn(fn, self.plan, self.platform)
+                self._planned_prefill[("paged", chunk_len)] = pf
+            logits, self.cache = pf(self.params, self.cache,
+                                    jnp.asarray(toks), bt, t0c)
+            self.stats.prefill_dispatches += pf.n_launches
+            self.stats.modeled_tklqt_s += pf.modeled_tklqt_s
+            self.stats.measured_dispatch_s += sum(pf.last_host_times)
+            for nm in pf.rule_names:
+                self.stats.rule_hits[nm] = self.stats.rule_hits.get(nm, 0) + 1
+        task.last_logits = logits
+        task.pos += chunk_len
+        self.stats.prefill_chunks += 1
+        dt = time.perf_counter() - t_start
+        t_begin = self.now
+        self.now += dt
+        if self.telemetry is not None:
+            self.telemetry.add(f"prefill_chunk[{chunk_len}]", "prefill",
+                               t_begin, self.now, rid=task.req.rid,
+                               slot=task.slot, pos=task.pos)
+            if self.plan != "jit":
+                self._record_segments(
+                    self._planned_prefill[("paged", chunk_len)], t_begin)
+
+    def _finish_prefill(self, task: _PrefillTask) -> None:
+        req, slot = task.req, task.slot
+        del self._prefill_tasks[slot]
+        self.lengths[slot] = len(task.toks)
+        if task.replay:
+            return          # resumed recompute: KV rebuilt, nothing emitted
+        first = self._sample(task.last_logits[0])
+        req.generated.append(first)
+        self.stats.prefills += 1
+        self.stats.tokens_out += 1
+        timing = RequestTiming(req.rid, arrival_s=req.arrival_s,
+                               first_token_s=self.now)
+        timing.token_times_s.append(self.now)
+        self.timings[req.rid] = timing
+        if len(req.generated) >= req.max_new_tokens:
+            req.done = True
+            req.status = "done"
+            timing.done_s = self.now
+            self._release_slot(slot, req)
+
+    def _advance_prefills(self) -> bool:
+        """One chunk of every in-flight prefill, interleaved with decode:
+        a long prompt yields the engine back after each chunk instead of
+        monopolizing it until its KV is fully built."""
+        progressed = False
+        for slot in sorted(self._prefill_tasks):
+            task = self._prefill_tasks.get(slot)
+            if task is None:        # finished earlier in this sweep
+                continue
+            remaining = len(task.toks) - task.pos
+            chunk_len = (remaining if self.prefill_chunk is None
+                         else min(self.prefill_chunk, remaining))
+            if not self._ensure_paged_blocks(
+                    task.req, task.pos + chunk_len, exclude=slot):
+                continue            # stalled on blocks; retry next step
+            self._run_prefill_chunk(task, chunk_len)
+            progressed = True
+            if task.pos >= len(task.toks):
+                self._finish_prefill(task)
+        return progressed
+
+    def _paged_decode_step(self) -> bool:
+        active = [i for i, s in enumerate(self.slots)
+                  if s is not None and i not in self._prefill_tasks]
+        # grow every row's table to cover the entry this step writes;
+        # growth may preempt younger rows out of this very step
+        stalled = set()
+        for i in active:
+            if self.slots[i] is None:
+                continue
+            if not self._ensure_paged_blocks(
+                    self.slots[i], int(self.lengths[i]) + 1, exclude=i):
+                # no victim right now (in-flight prefills hold the rest):
+                # sit this step out — a finishing prefill frees blocks or
+                # becomes preemptable next step.  A true deadlock (nothing
+                # anywhere can progress) is raised by run().
+                stalled.add(i)
+        active = [i for i in active
+                  if self.slots[i] is not None and i not in stalled]
+        if not active:
+            return False
+        toks = np.zeros((self.B, 1), np.int32)
+        for i in active:
+            toks[i, 0] = self.slots[i].generated[-1]
+        owners = [self.slots[i].rid
+                  if self.slots[i] is not None
+                  and i not in self._prefill_tasks else None
+                  for i in range(self.B)]
+        bt = jnp.asarray(self.kv.block_tables(owners))
+        t0 = time.perf_counter()
+        if self.plan == "jit":
+            logits, self.cache = self._decode_paged(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(self.lengths), bt)
+            self.stats.decode_dispatches += 1
+            disp = time.perf_counter() - t0
+            self.stats.measured_dispatch_s += disp
+            self.stats.decode_dispatch_time_s += disp
+        else:
+            if self._planned_decode is None:
+                self._planned_decode = _PlannedFn(
+                    functools.partial(self._paged_decode_body, unroll=True),
+                    self.plan, self.platform)
+            logits, self.cache = self._planned_decode(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(self.lengths), bt)
+            self.stats.decode_dispatches += self._planned_decode.n_launches
+            self.stats.fused_dispatches += \
+                len(self._planned_decode.rule_names)
+            for nm in self._planned_decode.rule_names:
+                self.stats.rule_hits[nm] = self.stats.rule_hits.get(nm, 0) + 1
+            self.stats.modeled_tklqt_s += \
+                self._planned_decode.modeled_tklqt_s
+            disp = sum(self._planned_decode.last_host_times)
+            self.stats.measured_dispatch_s += disp
+            self.stats.decode_dispatch_time_s += disp
+        self.stats.decode_steps += 1
+        self.stats.slot_occupancy.append(len(active))
+        self.stats.block_pool_utilization.append(self.kv.pool.utilization)
+        logits_np = np.asarray(logits)
+        dt = time.perf_counter() - t0
+        t_begin = self.now
+        self.now += dt
+        self.stats.step_times_s.append(dt)
+        if self.telemetry is not None:
+            self.telemetry.add(f"decode[b={len(active)}]", "decode",
+                               t_begin, self.now, batch=len(active))
+            if self.plan != "jit":
+                self._record_segments(self._planned_decode, t_begin)
+        for i in active:
+            req = self.slots[i]
+            self.lengths[i] += 1
+            nxt = int(np.argmax(logits_np[i]))
+            req.generated.append(nxt)
+            self.stats.tokens_out += 1
+            timing = self.timings.get(req.rid)
+            if timing is not None:
+                timing.token_times_s.append(self.now)
+            if len(req.generated) >= req.max_new_tokens or \
+                    self.lengths[i] >= self.T - 1:
+                req.done = True
+                req.status = "done"
+                if timing is not None:
+                    timing.done_s = self.now
+                self._release_slot(i, req)
+        return True
+
     def step(self):
         """One decode step for all active slots."""
+        if self.cache_mode == "paged":
+            progressed = self._advance_prefills()
+            progressed = self._paged_decode_step() or progressed
+            self._last_step_progressed = progressed
+            return
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return
@@ -415,6 +816,7 @@ class ServeEngine:
             if len(req.generated) >= req.max_new_tokens or \
                     self.lengths[i] >= self.T - 1:
                 req.done = True
+                req.status = "done"
                 self.slots[i] = None
                 self.lengths[i] = 0
                 if timing is not None:
@@ -430,17 +832,39 @@ class ServeEngine:
         """
         pending = sorted(requests, key=lambda r: r.arrival_s)
         done: list[Request] = []
-        while pending or any(s is not None for s in self.slots):
-            idle = not any(s is not None for s in self.slots)
+        while pending or self._preempted or \
+                any(s is not None for s in self.slots):
+            idle = not any(s is not None for s in self.slots) \
+                and not self._preempted
             if idle and pending and pending[0].arrival_s > self.now:
                 self.now = pending[0].arrival_s
+            admitted = False
+            # resumed requests first: they hold generation progress (and
+            # possibly offloaded KV) — finishing them frees blocks fastest
+            while self._preempted and self._free_slot() is not None:
+                if not self._admit_paged(self._preempted[0]):
+                    break               # no blocks to restore into yet
+                self._preempted.pop(0)
+                admitted = True
             while (pending and pending[0].arrival_s <= self.now
                    and self._free_slot() is not None):
                 if self.admit(pending[0]):
                     pending.pop(0)
+                    admitted = True
                 else:
                     break
             self.step()
+            if self.cache_mode == "paged" and not admitted \
+                    and not self._last_step_progressed \
+                    and (self._preempted
+                         or any(s is not None for s in self.slots)):
+                # nothing ran and nothing was admitted: no future step can
+                # free blocks either — the pool cannot hold this workload
+                raise RuntimeError(
+                    "paged engine deadlocked: block pool "
+                    f"({self.kv.num_blocks} x {self.kv.block_size} tokens) "
+                    "too small for even one in-flight request; raise "
+                    "num_blocks")
             for r in requests:
                 if r.done and r not in done:
                     done.append(r)
@@ -454,5 +878,12 @@ class ServeEngine:
         self.slots = [None] * self.B
         self.stats = EngineStats(plan=self.plan_label)
         self.now = 0.0
+        if self.cache_mode == "paged":
+            self.kv.reset()
+            self._prefill_tasks = {}
+            self._preempted = []
+            self._admit_seq = 0
+            if self.offload_tier is not None:
+                self.offload_tier.clear()
         if self.telemetry is not None:
             self.telemetry.clear()

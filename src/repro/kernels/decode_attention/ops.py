@@ -1,4 +1,4 @@
-"""Jitted wrapper for the decode-attention kernel."""
+"""Jitted wrappers for the decode-attention kernels (contiguous + paged)."""
 from __future__ import annotations
 
 import functools
@@ -6,7 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.kernel import decode_attention_kernel
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_kernel, paged_decode_attention_kernel)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "block_kv", "interpret"))
@@ -34,4 +35,36 @@ def decode_attention(q, k, v, kv_len=None, *, scale: float, block_kv=512,
     kv_len = jnp.minimum(kv_len, t)
     o = decode_attention_kernel(q[:, :, None, :], k, v, kv_len, scale=scale,
                                 block_kv=bkv, interpret=interpret)
+    return o[:, :, 0, :hd]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, kv_lens, *,
+                           scale: float, interpret=True):
+    """Decode attention through a block-table paged KV cache.
+
+    q: (B,HQ,hd); k_pages/v_pages: (P,bs,HKV,hd) pooled token pages (the
+    ``repro.kvcache`` layout); block_tables: (B,NB) int32 page ids (entries
+    past a row's length may be any value); kv_lens: (B,) valid tokens.
+
+    The wrapper re-lays pages head-major — (HKV,P,bs,hd) — so each grid
+    step of the kernel streams one (bs,hd) page tile picked by the
+    scalar-prefetched block table; on a real TPU this transpose would be
+    kept resident rather than re-done per step.
+    """
+    b, hq, hd = q.shape
+    n_pages, bs, hkv, _ = k_pages.shape
+    kp = jnp.transpose(k_pages, (2, 0, 1, 3))
+    vp = jnp.transpose(v_pages, (2, 0, 1, 3))
+    pad_h = (-hd) % 128
+    if pad_h:
+        q = jnp.pad(q, [(0, 0), (0, 0), (0, pad_h)])
+        kp = jnp.pad(kp, [(0, 0), (0, 0), (0, 0), (0, pad_h)])
+        vp = jnp.pad(vp, [(0, 0), (0, 0), (0, 0), (0, pad_h)])
+    # out-of-range table entries (pool sentinels) must not steer a DMA
+    bt = jnp.clip(block_tables.astype(jnp.int32), 0, n_pages - 1)
+    kv_lens = jnp.minimum(kv_lens.astype(jnp.int32),
+                          block_tables.shape[1] * bs)
+    o = paged_decode_attention_kernel(q[:, :, None, :], kp, vp, bt, kv_lens,
+                                      scale=scale, interpret=interpret)
     return o[:, :, 0, :hd]

@@ -1,4 +1,11 @@
-"""Oracle for single-token decode attention over a KV cache."""
+"""Oracles for single-token decode attention over a KV cache.
+
+``decode_attention_ref`` reads a contiguous per-sequence cache;
+``paged_decode_attention_ref`` reads the same logical KV through a
+block table over a pool of fixed-size token pages (the paged KV cache
+layout of ``repro.kvcache``): position ``t`` of row ``b`` lives at
+``pages[tables[b, t // bs], t % bs]``.
+"""
 from __future__ import annotations
 
 import jax
@@ -17,6 +24,30 @@ def decode_attention_ref(q, k, v, kv_len, *, scale: float):
     vf = jnp.repeat(v, g, axis=1).astype(jnp.float32)
     s = jnp.einsum("bhd,bhtd->bht", q.astype(jnp.float32), kf) * scale
     mask = jnp.arange(t)[None, None, :] < kv_len
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bht,bhtd->bhd", p, vf)
+    return o.astype(q.dtype)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, kv_lens, *,
+                               scale: float):
+    """q: (B,HQ,hd); k_pages/v_pages: (P,bs,HKV,hd) pooled token pages;
+    block_tables: (B,NB) int32 page ids (entries past a row's length may be
+    any value — they are masked); kv_lens: (B,) valid tokens per row.
+    Returns (B,HQ,hd)."""
+    b, hq, hd = q.shape
+    n_pages, bs, hkv, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    g = hq // hkv
+    safe = jnp.clip(block_tables, 0, n_pages - 1)
+    # gather each row's logical view: (B,NB,bs,HKV,hd) -> (B,HKV,T,hd)
+    kg = k_pages[safe].reshape(b, nb * bs, hkv, hd).transpose(0, 2, 1, 3)
+    vg = v_pages[safe].reshape(b, nb * bs, hkv, hd).transpose(0, 2, 1, 3)
+    kf = jnp.repeat(kg, g, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(vg, g, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhd,bhtd->bht", q.astype(jnp.float32), kf) * scale
+    mask = jnp.arange(nb * bs)[None, None, :] < kv_lens[:, None, None]
     s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bht,bhtd->bhd", p, vf)

@@ -1,0 +1,5 @@
+"""Paged KV-cache subsystem: block-table allocation, pooled device pages,
+and a host-memory offload tier priced by the CPU-GPU coupling fabric."""
+from repro.kvcache.allocator import BlockPool  # noqa: F401
+from repro.kvcache.offload import HostOffloadTier  # noqa: F401
+from repro.kvcache.paged import PagedKVCache, default_num_blocks  # noqa: F401

@@ -1,0 +1,93 @@
+"""Block-table paged KV allocation: fixed-size token pages from one pool.
+
+The pool is pure host-side bookkeeping — device pages live in the cache
+pytree (``models.make_paged_cache``); this class only decides WHICH page
+ids a sequence owns.  Allocation is deterministic (lowest free id first)
+so seeded engine runs place blocks identically run-to-run, and freed ids
+return to the pool sorted — the copy-on-free discipline (pages are
+zero-filled by the cache layer before reuse) means a fresh allocation
+never leaks a previous occupant's KV.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class BlockPool:
+    """Fixed-size token-block pool with per-owner block lists."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 1:
+            raise ValueError(f"num_blocks must be >= 1, got {num_blocks}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: list[int] = list(range(num_blocks))
+        self._owned: dict = {}            # owner -> [block ids, logical order]
+
+    # ------------------------------------------------------------ queries
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        return self.used_blocks / self.num_blocks
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to hold ``n_tokens`` KV entries."""
+        return -(-n_tokens // self.block_size)
+
+    def owned(self, owner) -> list:
+        return list(self._owned.get(owner, ()))
+
+    def owners(self) -> list:
+        return list(self._owned)
+
+    def can_alloc(self, n: int) -> bool:
+        return len(self._free) >= n
+
+    # ------------------------------------------------------------ mutation
+    def alloc(self, owner, n: int) -> list:
+        """Append ``n`` blocks to ``owner``'s list; lowest free ids first."""
+        if n < 0:
+            raise ValueError(f"cannot alloc {n} blocks")
+        if n > len(self._free):
+            raise MemoryError(
+                f"block pool exhausted: want {n}, have {len(self._free)} "
+                f"free of {self.num_blocks}")
+        ids = self._free[:n]
+        del self._free[:n]
+        self._owned.setdefault(owner, []).extend(ids)
+        return ids
+
+    def free(self, owner) -> list:
+        """Release all of ``owner``'s blocks back to the pool (sorted);
+        returns the freed ids so the cache layer can zero those pages."""
+        ids = self._owned.pop(owner, [])
+        self._free = sorted(self._free + list(ids))
+        return list(ids)
+
+    def ensure(self, owner, n_tokens: int) -> list:
+        """Grow ``owner`` to cover ``n_tokens`` entries; returns the newly
+        allocated ids (empty when already covered).  Raises MemoryError
+        when the pool cannot satisfy the growth — the engine's
+        evict-or-preempt policy decides what to do then."""
+        have = len(self._owned.get(owner, ()))
+        need = self.blocks_for(n_tokens)
+        if need <= have:
+            return []
+        return self.alloc(owner, need - have)
+
+    def table_row(self, owner, n_entries: int, sentinel: int) -> np.ndarray:
+        """(n_entries,) int32 block-table row, padded with ``sentinel``
+        (an out-of-range page id: gathers clamp, scatters drop)."""
+        row = np.full(n_entries, sentinel, np.int32)
+        ids = self._owned.get(owner, ())
+        row[:len(ids)] = ids[:n_entries]
+        return row

@@ -1,0 +1,72 @@
+"""Host-memory offload tier for cold KV blocks, priced per coupling fabric.
+
+Evicted blocks are staged in host arrays (the stand-in for pinned host
+memory on this CPU-only container) and restored on demand.  Every
+transfer is priced through ``core.device_model.offload_cost_s`` with the
+platform's host<->device link (PCIe for LC parts, NVLink-C2C for CC), so
+telemetry can report the MODELED offload tax per architecture while the
+byte counts themselves are measured from real evictions — the same
+measured-host / modeled-device split the rest of the repo uses.
+"""
+from __future__ import annotations
+
+from repro.core.device_model import PLATFORMS, PlatformSpec, offload_cost_s
+
+
+class HostOffloadTier:
+    """Staging store for evicted KV blocks + transfer-cost accounting."""
+
+    def __init__(self, platform):
+        self.spec: PlatformSpec = (platform if isinstance(platform,
+                                                          PlatformSpec)
+                                   else PLATFORMS[platform])
+        self._store: dict = {}       # rid -> (host leaf arrays, n_blocks)
+        self.offload_bytes = 0
+        self.restore_bytes = 0
+        self.evictions = 0
+        self.restores = 0
+        self.modeled_tax_s = 0.0     # total transfer time over the link
+
+    def holds(self, rid) -> bool:
+        return rid in self._store
+
+    def stored_blocks(self, rid) -> int:
+        return self._store[rid][1] if rid in self._store else 0
+
+    def evict(self, rid, host_leaves: list, n_blocks: int) -> tuple:
+        """Stage ``rid``'s gathered pages host-side; returns
+        (bytes_moved, modeled_transfer_s).  One DMA per block is the
+        transfer count the latency floor multiplies — paged eviction is
+        many small copies, exactly where a high-latency LC link hurts
+        most.  This is the single pricing site: callers surface the
+        returned tax rather than re-deriving it."""
+        nbytes = sum(a.nbytes for a in host_leaves)
+        tax = offload_cost_s(self.spec, nbytes, transfers=max(n_blocks, 1))
+        self._store[rid] = (host_leaves, n_blocks)
+        self.offload_bytes += nbytes
+        self.evictions += 1
+        self.modeled_tax_s += tax
+        return nbytes, tax
+
+    def restore(self, rid) -> tuple:
+        """Pop ``rid``'s staged pages for scatter back to device; returns
+        (host_leaves, n_blocks, bytes_moved, modeled_transfer_s)."""
+        host_leaves, n_blocks = self._store.pop(rid)
+        nbytes = sum(a.nbytes for a in host_leaves)
+        tax = offload_cost_s(self.spec, nbytes, transfers=max(n_blocks, 1))
+        self.restore_bytes += nbytes
+        self.restores += 1
+        self.modeled_tax_s += tax
+        return host_leaves, n_blocks, nbytes, tax
+
+    def drop(self, rid) -> None:
+        """Forget a finished request's staged blocks (if any)."""
+        self._store.pop(rid, None)
+
+    def clear(self) -> None:
+        self._store.clear()
+        self.offload_bytes = 0
+        self.restore_bytes = 0
+        self.evictions = 0
+        self.restores = 0
+        self.modeled_tax_s = 0.0

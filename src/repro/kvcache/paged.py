@@ -1,0 +1,108 @@
+"""Paged KV cache: pool bookkeeping + functional ops on the pages pytree.
+
+``PagedKVCache`` owns the geometry (block size, pool size, blocks per
+slot) and the ``BlockPool`` allocator; the device pages themselves are a
+plain cache pytree (``models.make_paged_cache`` — leaves shaped
+``(n_superblocks, P, bs, HKV, hd)``) that the engine threads through
+``forward`` functionally.  Methods that touch pages take and return the
+pytree rather than mutating hidden state, so jit boundaries stay clean.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kvcache.allocator import BlockPool
+from repro.models import make_paged_cache
+
+
+class PagedKVCache:
+    """Geometry + allocator for a block-table paged KV cache."""
+
+    def __init__(self, cfg, *, num_blocks: int, block_size: int,
+                 max_len: int, dtype=None):
+        if max_len < 1:
+            raise ValueError(f"max_len must be >= 1, got {max_len}")
+        self.cfg = cfg
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.max_len = max_len
+        # every block-table row spans the full max_len so the gathered
+        # logical view has ONE static shape (ceil(max_len/bs) pages) —
+        # no recompiles as sequences grow, and bitwise-comparable masked
+        # attention against the contiguous cache when bs divides max_len
+        self.nb_per_slot = -(-max_len // block_size)
+        self.pool = BlockPool(num_blocks, block_size)
+        self.dtype = dtype or cfg.cdtype
+
+    # page id guaranteed out of range: scatters drop it, gathers clamp it
+    @property
+    def sentinel(self) -> int:
+        return self.num_blocks
+
+    def make_pages(self):
+        """Fresh zeroed pages pytree for ``forward``."""
+        return make_paged_cache(self.cfg, self.num_blocks, self.block_size,
+                                self.dtype)
+
+    # ------------------------------------------------------------ tables
+    def table_row(self, owner) -> np.ndarray:
+        return self.pool.table_row(owner, self.nb_per_slot, self.sentinel)
+
+    def block_tables(self, owners: list) -> np.ndarray:
+        """(B, nb_per_slot) int32 table; ``None`` entries (inactive rows)
+        become all-sentinel rows whose writes are dropped."""
+        rows = [self.table_row(o) if o is not None
+                else np.full(self.nb_per_slot, self.sentinel, np.int32)
+                for o in owners]
+        return np.stack(rows).astype(np.int32)
+
+    # ------------------------------------------------- functional page ops
+    def zero_pages(self, pages, ids: list):
+        """Copy-on-free: zero-fill the freed pages before the pool hands
+        them to the next owner (no cross-request KV leaks, and masked
+        attention over stale entries stays exact-zero)."""
+        if not ids:
+            return pages
+        idx = jnp.asarray(ids, jnp.int32)
+        return jax.tree.map(lambda p: p.at[:, idx].set(0), pages)
+
+    def gather_host(self, pages, ids: list) -> list:
+        """Copy ``ids``' page contents device->host (the offload DMA);
+        returns one np.ndarray per cache leaf, in jax.tree.leaves order."""
+        idx = jnp.asarray(ids, jnp.int32)
+        return [np.asarray(leaf[:, idx]) for leaf in jax.tree.leaves(pages)]
+
+    def scatter_host(self, pages, ids: list, host_leaves: list):
+        """Copy host->device into freshly allocated pages (the restore)."""
+        idx = jnp.asarray(ids, jnp.int32)
+        leaves, treedef = jax.tree.flatten(pages)
+        new = [leaf.at[:, idx].set(jnp.asarray(h).astype(leaf.dtype))
+               for leaf, h in zip(leaves, host_leaves)]
+        return jax.tree.unflatten(treedef, new)
+
+    def block_bytes(self, pages, n_blocks: int = 1) -> int:
+        """Bytes of KV held by ``n_blocks`` pool blocks across all layers."""
+        total = 0
+        for leaf in jax.tree.leaves(pages):
+            per_block = leaf.dtype.itemsize * int(np.prod(
+                (leaf.shape[0],) + leaf.shape[2:]))
+            total += per_block * n_blocks
+        return total
+
+    def reset(self) -> None:
+        self.pool = BlockPool(self.num_blocks, self.block_size)
+
+
+def default_num_blocks(max_batch: int, max_len: int, block_size: int,
+                       num_blocks: Optional[int] = None) -> int:
+    """Pool size: explicit, else enough for every slot at full length
+    (capacity-equivalent to the contiguous cache — no pressure)."""
+    if num_blocks is not None:
+        if num_blocks < 1:
+            raise ValueError(f"num_blocks must be >= 1, got {num_blocks}")
+        return num_blocks
+    return max_batch * (-(-max_len // block_size))

@@ -12,6 +12,12 @@ CPU/GPU-bound classification, and writes to ``--out-dir``:
   trace_<scenario>_b<N>.json    merged host+modeled-device Chrome trace
                                 (open in Perfetto / chrome://tracing)
   characterize.json             BENCH-style summary of the whole sweep
+
+``--memory-sweep`` runs the paged-KV memory-pressure sweep instead:
+the same seeded traffic is served with the block pool driven past
+capacity on each ``--sweep-platforms`` device model (LC/PCIe vs
+CC/NVLink-C2C), printing measured offload traffic and the link-priced
+offload tax per architecture, and writing ``memory_sweep.json``.
 """
 from __future__ import annotations
 
@@ -26,7 +32,7 @@ from repro.core.device_model import PLATFORMS
 from repro.core.export import save_merged_trace
 from repro.inference.engine import PLAN_STRATEGIES
 from repro.models import init_params
-from repro.telemetry.characterize import characterize
+from repro.telemetry.characterize import characterize, memory_pressure_sweep
 from repro.workload import list_scenarios, load_workload, save_workload
 
 
@@ -78,12 +84,45 @@ def main():
                     help="replay a recorded workload JSONL instead of "
                          "generating from the scenario")
     ap.add_argument("--out-dir", default="characterize-out")
+    ap.add_argument("--memory-sweep", action="store_true",
+                    help="run the paged-KV memory-pressure sweep (LC vs "
+                         "CC offload tax) instead of the batch sweep")
+    ap.add_argument("--sweep-platforms", default="Intel+H100,GH200",
+                    help="comma-separated device models for --memory-sweep")
+    ap.add_argument("--pool-fracs", default="1.0,0.5,0.33",
+                    help="pool sizes as fractions of the no-pressure pool")
+    ap.add_argument("--block-size", type=int, default=4,
+                    help="tokens per KV block for --memory-sweep")
+    ap.add_argument("--sweep-max-batch", type=int, default=4)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
     params = init_params(jax.random.PRNGKey(0), cfg)
+
+    if args.memory_sweep:
+        sweep = memory_pressure_sweep(
+            cfg, params, scenario=args.scenario,
+            platforms=[p for p in args.sweep_platforms.split(",") if p],
+            pool_fracs=[float(f) for f in args.pool_fracs.split(",") if f],
+            max_batch=args.sweep_max_batch, max_len=args.max_len,
+            block_size=args.block_size, n_requests=args.requests,
+            seed=args.seed, prompt_cap=args.prompt_cap or None,
+            output_cap=args.output_cap or None)
+        for r in sweep["points"]:
+            print(f"{r['platform']:<12s} {r['coupling']:<3s} "
+                  f"link={r['link_gbps']}GB/s pool={r['pool_frac']:<5} "
+                  f"preempt={r['preemptions']:<3d} "
+                  f"offload={r['offload_bytes']}B "
+                  f"tax={r['modeled_offload_tax_us']}us "
+                  f"tax/tok={r['offload_tax_per_token_us']}us")
+        os.makedirs(args.out_dir, exist_ok=True)
+        path = os.path.join(args.out_dir, "memory_sweep.json")
+        with open(path, "w") as f:
+            json.dump(sweep, f, indent=2)
+        print(json.dumps({"summary": sweep, "artifacts": {"sweep": path}}))
+        return
     workload = load_workload(args.replay) if args.replay else None
     batches = [int(b) for b in args.batches.split(",")]
 

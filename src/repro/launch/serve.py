@@ -9,6 +9,13 @@ whole-step jax.jit closures; ``eager`` / ``chain`` / ``auto`` /
 runtime and report real per-step dispatch counts plus modeled TKLQT for
 ``--platform``.  ``--plan autotuned --plan-table plan_table.json`` loads
 the measured winners written by ``repro.launch.autotune``.
+
+Pick a KV cache with ``--cache``: ``paged`` serves through the
+block-table paged allocator (``--block-size`` tokens per block,
+``--num-blocks`` pool size, ``--prefill-chunk`` chunked prefill), with
+``--offload host`` staging evicted blocks in host memory priced by
+``--platform``'s coupling link; the JSON report then carries block-pool
+utilization, preemption, and offload-traffic counters.
 """
 from __future__ import annotations
 
@@ -20,7 +27,8 @@ import jax
 import numpy as np
 
 from repro.core.device_model import PLATFORMS
-from repro.inference.engine import PLAN_STRATEGIES, Request, ServeEngine
+from repro.inference.engine import (CACHE_MODES, OFFLOAD_MODES,
+                                    PLAN_STRATEGIES, Request, ServeEngine)
 from repro.configs import get_config, reduced
 from repro.models import init_params
 
@@ -39,6 +47,18 @@ def main():
                          "(required with --plan autotuned)")
     ap.add_argument("--platform", default="TPU-v5e",
                     choices=sorted(PLATFORMS))
+    ap.add_argument("--cache", default="contiguous", choices=CACHE_MODES)
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (paged cache)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="block-pool size; default fits every slot at "
+                         "--max-len (no memory pressure)")
+    ap.add_argument("--offload", default="none", choices=OFFLOAD_MODES,
+                    help="host: evict cold blocks to host memory and "
+                         "restore on resume; none: preempt + recompute")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="admit prompts in chunks of this many tokens, "
+                         "interleaved with decode steps")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip the warmup pass; measured fields (launch "
                          "tax, TTFT, ITL) then include jit-compile time")
@@ -50,7 +70,10 @@ def main():
     params = init_params(jax.random.PRNGKey(0), cfg)
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
                       max_len=args.max_len, plan=args.plan,
-                      platform=args.platform, plan_table=args.plan_table)
+                      platform=args.platform, plan_table=args.plan_table,
+                      cache=args.cache, block_size=args.block_size,
+                      num_blocks=args.num_blocks, offload=args.offload,
+                      prefill_chunk=args.prefill_chunk)
 
     def make_requests():
         rng = np.random.default_rng(0)
@@ -68,9 +91,26 @@ def main():
     done = eng.run(reqs)
     dt = time.time() - t0
     st = eng.stats
+    occ = st.slot_occupancy
     print(json.dumps({
-        "arch": cfg.name, "requests": len(done),
+        "arch": cfg.name,
+        "requests": sum(1 for r in done if r.status == "done"),
         "plan": st.plan,
+        "cache": args.cache,
+        "slot_occupancy": {
+            "mean": round(float(np.mean(occ)), 2) if occ else 0.0,
+            "peak": int(max(occ)) if occ else 0,
+        },
+        "block_pool_utilization": {
+            "mean": round(st.mean_block_pool_utilization, 3),
+            "peak": round(st.peak_block_pool_utilization, 3),
+        },
+        "preemptions": st.preemptions,
+        "rejected": st.rejected,
+        "prefill_chunks": st.prefill_chunks,
+        "offload_bytes": st.offload_bytes,
+        "restore_bytes": st.restore_bytes,
+        "modeled_offload_tax_us": round(st.modeled_offload_tax_s * 1e6, 1),
         "tokens_out": st.tokens_out,
         "decode_steps": st.decode_steps,
         "decode_dispatches": st.decode_dispatches,
@@ -83,7 +123,7 @@ def main():
         "modeled_tklqt_us": round(st.modeled_tklqt_s * 1e6, 1),
         "measured_launch_tax_per_step_us": round(
             st.launch_tax_per_step_s * 1e6, 1),
-        "mean_occupancy": round(float(np.mean(st.slot_occupancy)), 2),
+        "mean_occupancy": round(float(np.mean(occ)), 2) if occ else 0.0,
         "tok_per_s": round(st.tokens_out / dt, 1),
         "ttft_ms": {rid: round(t * 1e3, 3)
                     for rid, t in sorted(st.ttft_s.items())},

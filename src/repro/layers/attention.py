@@ -144,6 +144,46 @@ def attention_core(q, k, v, **kw):
     return mha(q, k, v, **kw)
 
 
+def _paged_attention_fwd(q, k, v, cache, block_tables, positions, lengths,
+                         cache_index, cfg: ModelConfig, *,
+                         causal, window, scale):
+    """Self-attention over the block-table paged KV cache.
+
+    Pages are pool-global — k_pages/v_pages: (P, bs, HKV, hd) — and
+    ``block_tables`` (B, NB) maps a row's logical token position ``t`` to
+    page ``bt[b, t // bs]``.  New K/V rows are scattered at their positions
+    (out-of-range table entries — the pool's pad sentinel — drop the
+    write), then each row's logical view is gathered back for the masked
+    attention core: the pure-XLA analogue of
+    ``repro.kernels.decode_attention.paged_decode_attention``.
+    """
+    assert block_tables is not None, "paged KV cache needs block_tables"
+    b, s = q.shape[0], q.shape[1]
+    kp, vp = cache["k_pages"], cache["v_pages"]
+    n_pages, bs_blk = kp.shape[0], kp.shape[1]
+    pages = jnp.take_along_axis(block_tables, positions // bs_blk, axis=1)
+    offs = positions % bs_blk
+    kp = kp.at[pages, offs].set(k.astype(kp.dtype), mode="drop")
+    vp = vp.at[pages, offs].set(v.astype(vp.dtype), mode="drop")
+    new_cache = {"k_pages": kp, "v_pages": vp}
+    safe = jnp.clip(block_tables, 0, n_pages - 1)
+    t = block_tables.shape[1] * bs_blk
+    kg = kp[safe].reshape(b, t, kp.shape[2], kp.shape[3])
+    vg = vp[safe].reshape(b, t, vp.shape[2], vp.shape[3])
+    kv_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    if lengths is not None:
+        # continuous-batching decode: each row just wrote at its length
+        kv_valid = kv_pos <= lengths[:, None]
+    else:
+        # (chunked) prefill: tokens [cache_index, cache_index + s) written
+        kv_valid = kv_pos < cache_index + s
+    out = attention_core(q, kg, vg, scale=scale, causal=causal,
+                         window=window, cap=cfg.attn_softcap,
+                         q_positions=positions, kv_positions=kv_pos,
+                         kv_valid=kv_valid)
+    return out, new_cache
+
+
 def attention_fwd(
     params,
     x,
@@ -158,6 +198,7 @@ def attention_fwd(
     cache_index: Optional[jax.Array] = None,  # scalar int32 write offset
     lengths: Optional[jax.Array] = None,    # (B,) per-row lengths (cont. batching)
     shd=None,                               # sharding hook (head-parallel attn)
+    block_tables: Optional[jax.Array] = None,  # (B,NB) page ids (paged cache)
 ):
     """Returns (out (B,S,d), new_cache|None).
 
@@ -194,6 +235,12 @@ def attention_fwd(
         v = _project(params, x, cfg, "v", hkv)
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
+        if cache is not None and "k_pages" in cache:
+            out, new_cache = _paged_attention_fwd(
+                q, k, v, cache, block_tables, positions, lengths,
+                cache_index, cfg, causal=causal, window=window, scale=scale)
+            out = out.reshape(b, s, hq * cfg.hd) @ params["wo"]
+            return out, new_cache
         if shd is not None:
             if s == 1 and cache is not None:
                 # decode: the q row is tiny — replicate it over tp and keep
@@ -251,6 +298,15 @@ def attention_fwd(
 def make_self_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
     shape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def make_paged_self_cache(cfg: ModelConfig, num_pages: int, block_size: int,
+                          dtype):
+    """Pool-global paged KV: pages are shared by all slots via block tables
+    (``repro.kvcache``) rather than pre-carved per batch row."""
+    shape = (num_pages, block_size, cfg.n_kv_heads, cfg.hd)
+    return {"k_pages": jnp.zeros(shape, dtype),
+            "v_pages": jnp.zeros(shape, dtype)}
 
 
 def init_cross_cache(params, cfg: ModelConfig, cross_kv):

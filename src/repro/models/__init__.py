@@ -1,3 +1,4 @@
 from repro.models.transformer import (  # noqa: F401
-    init_params, forward, make_cache, loss_fn, param_count, active_param_count,
+    init_params, forward, make_cache, make_paged_cache, loss_fn, param_count,
+    active_param_count,
 )

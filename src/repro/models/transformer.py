@@ -125,10 +125,34 @@ def make_cache(cfg: ModelConfig, batch: int, max_len: int,
                         per_sb)
 
 
+def make_paged_cache(cfg: ModelConfig, num_pages: int, block_size: int,
+                     dtype=None):
+    """Stacked (over superblocks) PAGED decode cache: per attention slot a
+    pool of ``num_pages`` fixed-size token pages shared across batch rows
+    through block tables (``forward(..., block_tables=...)``).  Only
+    pure-attention stacks page — recurrent state (mamba/rwkv) is O(1) per
+    slot and has nothing to page."""
+    dtype = dtype or cfg.cdtype
+    unsupported = [k for k in cfg.block_pattern
+                   if k not in ("attn", "attn_local")]
+    if unsupported:
+        raise ValueError(
+            f"paged KV cache supports pure-attention stacks only; "
+            f"{cfg.name} has block kinds {unsupported}")
+    if cfg.n_encoder_layers:
+        raise ValueError("paged KV cache does not support enc-dec models")
+    per_sb = {f"slot{i}": {"self": attn.make_paged_self_cache(
+                  cfg, num_pages, block_size, dtype)}
+              for i, kind in enumerate(cfg.block_pattern)}
+    n = cfg.n_superblocks
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape),
+                        per_sb)
+
+
 # =========================================================== forward
 def _apply_slot(bp, x, cfg: ModelConfig, kind: str, slot: int, *,
                 positions, causal, cache, cache_index, encoder_out,
-                dist, shd, aux, lengths=None):
+                dist, shd, aux, lengths=None, block_tables=None):
     h = rmsnorm(x, bp["norm1"]["scale"], cfg.norm_eps)
     new_cache = dict(cache) if cache is not None else None
 
@@ -139,6 +163,7 @@ def _apply_slot(bp, x, cfg: ModelConfig, kind: str, slot: int, *,
             window=window,
             cache=None if cache is None else cache.get("self"),
             cache_index=cache_index, lengths=lengths,
+            block_tables=block_tables,
             shd=None if shd is _id_shard else shd)
         if nc is not None:
             new_cache["self"] = nc
@@ -209,7 +234,7 @@ REMAT_POLICIES = {
 def _run_stack(blocks, x, cfg: ModelConfig, pattern, *, positions, causal,
                cache, cache_index, encoder_out, dist, shd, remat: bool,
                remat_policy: str = "nothing", unroll: bool = False,
-               lengths=None):
+               lengths=None, block_tables=None):
     def body(carry, xs):
         x, aux = carry
         bp, cache_sb = xs
@@ -220,7 +245,8 @@ def _run_stack(blocks, x, cfg: ModelConfig, pattern, *, positions, causal,
                 bp[sl], x, cfg, kind, i, positions=positions, causal=causal,
                 cache=None if cache_sb is None else cache_sb[sl],
                 cache_index=cache_index, encoder_out=encoder_out,
-                dist=dist, shd=shd, aux=aux, lengths=lengths)
+                dist=dist, shd=shd, aux=aux, lengths=lengths,
+                block_tables=block_tables)
             new_cache_sb[sl] = nc if nc is not None else {}
         return (shd("resid", x), aux), new_cache_sb
 
@@ -264,11 +290,15 @@ def forward(params, tokens, cfg: ModelConfig, *,
             remat_policy: str = "nothing",
             return_hidden: bool = False,
             unroll: bool = False,
-            lengths: Optional[jax.Array] = None):
+            lengths: Optional[jax.Array] = None,
+            block_tables: Optional[jax.Array] = None):
     """Returns (logits_f32, aux, new_cache) — or final hidden states instead
     of logits when return_hidden (chunked-loss path skips the unembed).
     unroll=True runs the layer stack as a python loop (SKIP profiling).
-    lengths: (B,) per-row positions for continuous-batching decode."""
+    lengths: (B,) per-row positions for continuous-batching decode.
+    block_tables: (B,NB) page ids when ``cache`` is paged (make_paged_cache);
+    shared by every layer — the table redirects where pages live, and the
+    same block layout is used across the stack."""
     b, s = tokens.shape
     if cache_index is None:
         cache_index = jnp.zeros((), jnp.int32)
@@ -303,7 +333,7 @@ def forward(params, tokens, cfg: ModelConfig, *,
         positions=positions, causal=causal, cache=cache,
         cache_index=cache_index, encoder_out=encoder_out,
         dist=dist, shd=shd, remat=remat, remat_policy=remat_policy,
-        unroll=unroll, lengths=lengths)
+        unroll=unroll, lengths=lengths, block_tables=block_tables)
     x = rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
     if return_hidden:
         return x, aux, (new_cache if cache is not None else None)

@@ -64,6 +64,13 @@ class MeasuredPoint:
     decode_steps: int
     fused_dispatches_per_decode_step: float = 0.0  # rule-backed fused kernels
     rule_hits: dict = field(default_factory=dict)  # fusion-rule launch counts
+    # paged KV cache counters (zero under cache="contiguous")
+    preemptions: int = 0
+    offload_bytes: int = 0
+    restore_bytes: int = 0
+    modeled_offload_tax_s: float = 0.0
+    mean_pool_utilization: float = 0.0
+    peak_pool_utilization: float = 0.0
     spans: list = field(default_factory=list)           # telemetry Spans
     modeled_events: list = field(default_factory=list)  # one decode step
     decode_anchors: list = field(default_factory=list)  # decode span starts
@@ -85,6 +92,13 @@ class MeasuredPoint:
             "mean_occupancy": round(self.mean_occupancy, 2),
             "tokens_out": self.tokens_out,
             "decode_steps": self.decode_steps,
+            "preemptions": self.preemptions,
+            "offload_bytes": self.offload_bytes,
+            "restore_bytes": self.restore_bytes,
+            "modeled_offload_tax_us":
+                round(self.modeled_offload_tax_s * 1e6, 1),
+            "mean_pool_utilization": round(self.mean_pool_utilization, 3),
+            "peak_pool_utilization": round(self.peak_pool_utilization, 3),
         }
         out.update(self.latency.row())
         return out
@@ -126,11 +140,17 @@ def _requests(workload: Workload) -> list:
 
 def run_point(cfg, params, workload: Workload, *, batch: int,
               plan: str = "auto", platform: str = "TPU-v5e",
-              max_len: int = 256, warmup: bool = True) -> MeasuredPoint:
+              max_len: int = 256, warmup: bool = True,
+              cache: str = "contiguous", block_size: int = 16,
+              num_blocks=None, offload: str = "none",
+              prefill_chunk=None) -> MeasuredPoint:
     """Serve the workload with ``batch`` slots and measure one sweep point."""
     rec = SpanRecorder()
     eng = ServeEngine(cfg, params, max_batch=batch, max_len=max_len,
-                      plan=plan, platform=platform, telemetry=rec)
+                      plan=plan, platform=platform, telemetry=rec,
+                      cache=cache, block_size=block_size,
+                      num_blocks=num_blocks, offload=offload,
+                      prefill_chunk=prefill_chunk)
     if warmup:
         eng.run(_requests(workload))
         eng.reset()
@@ -150,6 +170,12 @@ def run_point(cfg, params, workload: Workload, *, batch: int,
         dispatches_per_decode_step=st.dispatches_per_decode_step,
         fused_dispatches_per_decode_step=st.fused_dispatches_per_decode_step,
         rule_hits=dict(st.rule_hits),
+        preemptions=st.preemptions,
+        offload_bytes=st.offload_bytes,
+        restore_bytes=st.restore_bytes,
+        modeled_offload_tax_s=st.modeled_offload_tax_s,
+        mean_pool_utilization=st.mean_block_pool_utilization,
+        peak_pool_utilization=st.peak_block_pool_utilization,
         modeled_tklqt_s=st.modeled_tklqt_s,
         tokens_per_s=st.tokens_out / eng.now if eng.now else 0.0,
         mean_occupancy=(sum(st.slot_occupancy) / len(st.slot_occupancy)
@@ -168,8 +194,10 @@ def characterize(cfg, params, *, scenario: str = "chatbot",
                  seed: int = 0, prompt_cap: Optional[int] = 24,
                  output_cap: Optional[int] = 8, time_scale: float = 1.0,
                  max_len: int = 256, warmup: bool = True,
-                 workload: Optional[Workload] = None
-                 ) -> CharacterizationResult:
+                 workload: Optional[Workload] = None,
+                 cache: str = "contiguous", block_size: int = 16,
+                 num_blocks=None, offload: str = "none",
+                 prefill_chunk=None) -> CharacterizationResult:
     """Scenario x batch sweep over the live engine -> measured boundedness.
 
     Pass ``workload`` (e.g. loaded from a recorded JSONL trace) to replay
@@ -189,7 +217,10 @@ def characterize(cfg, params, *, scenario: str = "chatbot",
             f"but model {cfg.name} has vocab_size={cfg.vocab_size}; "
             "re-record the trace against this config")
     points = [run_point(cfg, params, workload, batch=b, plan=plan,
-                        platform=platform, max_len=max_len, warmup=warmup)
+                        platform=platform, max_len=max_len, warmup=warmup,
+                        cache=cache, block_size=block_size,
+                        num_blocks=num_blocks, offload=offload,
+                        prefill_chunk=prefill_chunk)
               for b in batches]
     bound = classify_measured_sweep(
         [p.batch for p in points],
@@ -199,3 +230,101 @@ def characterize(cfg, params, *, scenario: str = "chatbot",
         arch=cfg.name, scenario=workload.scenario, plan=plan,
         platform=platform, workload=workload, points=points,
         boundedness=bound)
+
+
+# ------------------------------------------------------------ memory pressure
+@dataclass
+class MemoryPressurePoint:
+    """One (platform, pool size) cell of the memory-pressure sweep."""
+    platform: str
+    coupling: str                  # LC (PCIe) | CC (C2C)
+    link_gbps: float
+    pool_frac: float               # fraction of the no-pressure pool size
+    num_blocks: int
+    preemptions: int
+    offload_bytes: int
+    restore_bytes: int
+    modeled_offload_tax_s: float
+    peak_pool_utilization: float
+    tokens_out: int
+    decode_steps: int
+
+    def row(self) -> dict:
+        tax_us = self.modeled_offload_tax_s * 1e6
+        return {
+            "platform": self.platform, "coupling": self.coupling,
+            "link_gbps": round(self.link_gbps, 1),
+            "pool_frac": self.pool_frac, "num_blocks": self.num_blocks,
+            "preemptions": self.preemptions,
+            "offload_bytes": self.offload_bytes,
+            "restore_bytes": self.restore_bytes,
+            "modeled_offload_tax_us": round(tax_us, 1),
+            "offload_tax_per_token_us":
+                round(tax_us / self.tokens_out, 2) if self.tokens_out
+                else 0.0,
+            "peak_pool_utilization": round(self.peak_pool_utilization, 3),
+            "tokens_out": self.tokens_out,
+            "decode_steps": self.decode_steps,
+        }
+
+
+def memory_pressure_sweep(cfg, params, *, scenario: str = "chatbot",
+                          platforms: Sequence[str] = ("Intel+H100", "GH200"),
+                          pool_fracs: Sequence[float] = (1.0, 0.5, 0.33),
+                          max_batch: int = 4, max_len: int = 64,
+                          block_size: int = 4, prefill_chunk: Optional[int] = None,
+                          n_requests: int = 8, seed: int = 0,
+                          prompt_cap: Optional[int] = 16,
+                          output_cap: Optional[int] = 8) -> dict:
+    """Drive the paged engine's block pool past capacity on LC vs CC
+    device models (the paper's coupling axis applied to KV offload).
+
+    The eviction traffic is MEASURED — the same seeded workload drives
+    near-identical preemptions and offload bytes on every platform
+    (exactly identical for closed-loop scenarios; open-loop arrivals
+    interact with measured step durations) — while the transfer time
+    those bytes cost is MODELED through each platform's coupling link
+    (``core.device_model.offload_cost_s``), so the sweep isolates how
+    PCIe (LC) vs NVLink-C2C (CC) bandwidth changes the offload tax of
+    serving under memory pressure.
+    """
+    from repro.core.device_model import PLATFORMS
+    workload = sample_requests(scenario, n_requests, seed=seed,
+                               vocab_size=cfg.vocab_size,
+                               prompt_cap=prompt_cap, output_cap=output_cap)
+    # pool sized against the workload's own peak demand (longest possible
+    # sequence on every slot at once) so pool_frac < 1 actually presses
+    longest = max(len(r.prompt) + r.max_new_tokens
+                  for r in workload.requests)
+    per_seq = -(-longest // block_size)
+    full_blocks = max_batch * per_seq
+    min_blocks = per_seq + 1                     # one full request + growth
+    points = []
+    for plat in platforms:
+        spec = PLATFORMS[plat]
+        for frac in pool_fracs:
+            nb = max(min_blocks, int(full_blocks * frac))
+            eng = ServeEngine(cfg, params, max_batch=max_batch,
+                              max_len=max_len, platform=plat,
+                              cache="paged", block_size=block_size,
+                              num_blocks=nb, offload="host",
+                              prefill_chunk=prefill_chunk)
+            eng.run(_requests(workload))
+            st = eng.stats
+            points.append(MemoryPressurePoint(
+                platform=plat, coupling=spec.coupling,
+                link_gbps=spec.link_bw / 1e9, pool_frac=frac,
+                num_blocks=nb, preemptions=st.preemptions,
+                offload_bytes=st.offload_bytes,
+                restore_bytes=st.restore_bytes,
+                modeled_offload_tax_s=st.modeled_offload_tax_s,
+                peak_pool_utilization=st.peak_block_pool_utilization,
+                tokens_out=st.tokens_out, decode_steps=st.decode_steps))
+    return {
+        "arch": cfg.name, "scenario": workload.scenario,
+        "seed": workload.seed, "n_requests": workload.n,
+        "max_batch": max_batch, "max_len": max_len,
+        "block_size": block_size, "full_pool_blocks": full_blocks,
+        "platforms": list(platforms), "pool_fracs": list(pool_fracs),
+        "points": [p.row() for p in points],
+    }

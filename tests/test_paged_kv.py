@@ -1,0 +1,366 @@
+"""Paged KV-cache subsystem: allocator invariants, paged decode-attention
+kernel vs oracles, paged forward vs contiguous forward, engine-level token
+equivalence (plain / chunked prefill / preempt-recompute / preempt-offload),
+the admit() overflow guard, and LC-vs-CC offload pricing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.device_model import PLATFORMS, offload_cost_s
+from repro.inference.engine import Request, ServeEngine
+from repro.kernels.decode_attention.ops import paged_decode_attention
+from repro.kernels.decode_attention.ref import (decode_attention_ref,
+                                                paged_decode_attention_ref)
+from repro.kvcache import BlockPool, HostOffloadTier, default_num_blocks
+from repro.models import forward, init_params, make_cache, make_paged_cache
+from repro.telemetry.characterize import memory_pressure_sweep
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("smollm-360m"), n_layers=2)
+    params = init_params(KEY, cfg)
+    return cfg, params
+
+
+def _mk_requests(cfg, n=4, base_plen=7, max_new=5):
+    rng = np.random.default_rng(0)
+    return [Request(i, prompt=list(rng.integers(0, cfg.vocab_size,
+                                                base_plen + 3 * i)),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _tokens(done):
+    return {r.rid: list(r.generated) for r in done}
+
+
+# ------------------------------------------------------------ allocator
+def test_block_pool_alloc_free_invariants():
+    pool = BlockPool(8, 4)
+    a = pool.alloc("a", 3)
+    assert a == [0, 1, 2] and pool.used_blocks == 3
+    b = pool.alloc("b", 2)
+    assert b == [3, 4] and pool.free_blocks == 3
+    assert pool.blocks_for(9) == 3 and pool.blocks_for(8) == 2
+    freed = pool.free("a")
+    assert freed == [0, 1, 2] and pool.free_blocks == 6
+    # lowest ids first, including recycled ones
+    c = pool.alloc("c", 4)
+    assert c == [0, 1, 2, 5]
+    assert pool.owned("c") == [0, 1, 2, 5]
+    with pytest.raises(MemoryError):
+        pool.alloc("d", 3)
+    assert pool.ensure("c", 16) == []          # already covered
+    assert pool.utilization == pytest.approx(6 / 8)
+
+
+def test_block_pool_table_row_and_validation():
+    with pytest.raises(ValueError):
+        BlockPool(0, 4)
+    with pytest.raises(ValueError):
+        BlockPool(4, 0)
+    pool = BlockPool(4, 2)
+    pool.alloc("x", 2)
+    row = pool.table_row("x", 4, sentinel=99)
+    assert list(row) == [0, 1, 99, 99]
+    assert list(pool.table_row("ghost", 3, sentinel=7)) == [7, 7, 7]
+
+
+def test_default_num_blocks():
+    assert default_num_blocks(4, 64, 16) == 16    # 4 slots x 4 blocks
+    assert default_num_blocks(4, 64, 16, num_blocks=5) == 5
+    with pytest.raises(ValueError):
+        default_num_blocks(4, 64, 16, num_blocks=0)
+
+
+# ------------------------------------------------------------ kernel
+def _scatter_pages(k, v, lens, bs, n_pages, seed=0):
+    """Contiguous (B,HKV,T,hd) -> permuted pages + tables (np)."""
+    b, hkv, t, hd = k.shape
+    nb = t // bs
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n_pages)
+    tables = np.full((b, nb), n_pages + 3, np.int32)     # sentinel pad
+    kp = np.zeros((n_pages, bs, hkv, hd), np.float32)
+    vp = np.zeros((n_pages, bs, hkv, hd), np.float32)
+    kn, vn = np.asarray(k), np.asarray(v)
+    nxt = 0
+    for row in range(b):
+        for i in range(-(-int(lens[row]) // bs)):
+            pg = int(perm[nxt])
+            nxt += 1
+            tables[row, i] = pg
+            kp[pg] = kn[row, :, i * bs:(i + 1) * bs].transpose(1, 0, 2)
+            vp[pg] = vn[row, :, i * bs:(i + 1) * bs].transpose(1, 0, 2)
+    return jnp.asarray(kp), jnp.asarray(vp), tables
+
+
+@pytest.mark.parametrize("shape,bs", [
+    ((2, 6, 2, 32, 32), 8),            # GQA g=3
+    ((1, 4, 4, 64, 16), 16),           # MHA, hd=16 (pads to 128)
+    ((3, 8, 2, 128, 64), 32),          # wider pool
+])
+def test_paged_kernel_vs_refs(shape, bs):
+    b, hq, hkv, t, hd = shape
+    n_pages = 2 * (b * t // bs)
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, hd))
+    k = jax.random.normal(ks[1], (b, hkv, t, hd))
+    v = jax.random.normal(ks[2], (b, hkv, t, hd))
+    lens = np.array([t - 3 * i for i in range(b)], np.int32)
+    kp, vp, tables = _scatter_pages(k, v, lens, bs, n_pages)
+    tj, lj = jnp.asarray(tables), jnp.asarray(lens)
+    o = paged_decode_attention(q, kp, vp, tj, lj, scale=0.2)
+    r = paged_decode_attention_ref(q, kp, vp, tj, lj, scale=0.2)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               atol=2e-5, rtol=2e-5)
+    # the paged path must agree with the CONTIGUOUS oracle row by row
+    for row in range(b):
+        rc = decode_attention_ref(q[row:row + 1], k[row:row + 1],
+                                  v[row:row + 1], int(lens[row]), scale=0.2)
+        np.testing.assert_allclose(np.asarray(o[row:row + 1]),
+                                   np.asarray(rc), atol=2e-5, rtol=2e-5)
+
+
+def test_paged_kernel_ignores_sentinel_table_entries():
+    b, hq, hkv, t, hd, bs = 1, 2, 1, 32, 16, 8
+    n_pages = 8
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, hd))
+    k = jax.random.normal(ks[1], (b, hkv, t, hd))
+    v = jax.random.normal(ks[2], (b, hkv, t, hd))
+    lens = np.array([9], np.int32)                 # 2 of 4 pages valid
+    kp, vp, tables = _scatter_pages(k, v, lens, bs, n_pages)
+    o1 = paged_decode_attention(q, kp, vp, jnp.asarray(tables),
+                                jnp.asarray(lens), scale=0.2)
+    garbage = tables.copy()
+    garbage[0, 2:] = [0, n_pages + 1000]           # valid-range AND huge ids
+    o2 = paged_decode_attention(q, kp, vp, jnp.asarray(garbage),
+                                jnp.asarray(lens), scale=0.2)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+# ------------------------------------------------------------ model forward
+def test_make_paged_cache_rejects_non_attention():
+    with pytest.raises(ValueError, match="pure-attention"):
+        make_paged_cache(reduced(get_config("rwkv6-3b")), 8, 4)
+
+
+def test_forward_paged_matches_contiguous(small_model):
+    cfg, params = small_model
+    b, max_len, bs = 2, 32, 8
+    pool = b * (max_len // bs)
+    prompts = [[5, 9, 2, 7, 1], [3, 8, 4, 4, 6, 2, 9, 1, 5]]
+
+    cache = make_cache(cfg, b, max_len, src_len=1, dtype=cfg.cdtype)
+    logits_c = []
+    for i, p in enumerate(prompts):
+        sub = jax.tree.map(
+            lambda c: jnp.zeros_like(
+                jax.lax.dynamic_slice_in_dim(c, i, 1, axis=1)), cache)
+        lg, _, sub2 = forward(params, jnp.asarray([p]), cfg, cache=sub,
+                              cache_index=jnp.zeros((), jnp.int32))
+        cache = jax.tree.map(
+            lambda c, s_: jax.lax.dynamic_update_slice_in_dim(
+                c, s_.astype(c.dtype), i, axis=1), cache, sub2)
+        logits_c.append(np.asarray(lg[0, len(p) - 1]))
+
+    pcache = make_paged_cache(cfg, pool, bs, dtype=cfg.cdtype)
+    tables = np.full((b, max_len // bs), pool + 5, np.int32)
+    free = list(range(pool))
+    logits_p = []
+    for i, p in enumerate(prompts):     # chunked prefill, chunks of 4
+        out, t0 = None, 0
+        while t0 < len(p):
+            chunk = p[t0:t0 + 4]
+            while (tables[i] != pool + 5).sum() * bs < t0 + len(chunk):
+                tables[i, (tables[i] != pool + 5).sum()] = free.pop(0)
+            lg, _, pcache = forward(
+                params, jnp.asarray([chunk]), cfg, cache=pcache,
+                cache_index=jnp.asarray(t0, jnp.int32),
+                block_tables=jnp.asarray(tables[i:i + 1]))
+            out, t0 = lg[0, -1], t0 + len(chunk)
+        logits_p.append(np.asarray(out))
+
+    for lc, lp in zip(logits_c, logits_p):
+        np.testing.assert_allclose(lc, lp, atol=1e-5, rtol=1e-5)
+
+    # one batched decode step
+    lengths = jnp.asarray([len(p) for p in prompts], jnp.int32)
+    toks = jnp.asarray([[int(lg.argmax())] for lg in logits_c], jnp.int32)
+    lg_c, _, _ = forward(params, toks, cfg, cache=cache, lengths=lengths)
+    lg_p, _, _ = forward(params, toks, cfg, cache=pcache, lengths=lengths,
+                         block_tables=jnp.asarray(tables))
+    np.testing.assert_allclose(np.asarray(lg_c), np.asarray(lg_p),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------------------ engine
+def test_engine_paged_matches_contiguous_tokens(small_model):
+    cfg, params = small_model
+    e1 = ServeEngine(cfg, params, max_batch=2, max_len=32)
+    t1 = _tokens(e1.run(_mk_requests(cfg)))
+    e2 = ServeEngine(cfg, params, max_batch=2, max_len=32,
+                     cache="paged", block_size=8)
+    t2 = _tokens(e2.run(_mk_requests(cfg)))
+    assert t1 == t2
+    assert e2.stats.preemptions == 0
+    assert e2.stats.peak_block_pool_utilization > 0
+
+
+def test_chunked_prefill_matches_unchunked(small_model):
+    cfg, params = small_model
+    whole = ServeEngine(cfg, params, max_batch=2, max_len=32,
+                        cache="paged", block_size=8)
+    t_whole = _tokens(whole.run(_mk_requests(cfg)))
+    chunked = ServeEngine(cfg, params, max_batch=2, max_len=32,
+                          cache="paged", block_size=8, prefill_chunk=4)
+    t_chunk = _tokens(chunked.run(_mk_requests(cfg)))
+    assert t_whole == t_chunk
+    # the longest prompt (16 tokens) must have been split into 4 chunks
+    assert chunked.stats.prefill_chunks > chunked.stats.prefills
+
+
+@pytest.mark.parametrize("offload", ["none", "host"])
+def test_preemption_resume_byte_identical(small_model, offload):
+    """Satellite: exhaust the block pool, assert evicted requests resume
+    and final tokens match an unconstrained run byte-for-byte."""
+    cfg, params = small_model
+    free = ServeEngine(cfg, params, max_batch=2, max_len=32,
+                       cache="paged", block_size=4)
+    t_free = _tokens(free.run(_mk_requests(cfg)))
+    tight = ServeEngine(cfg, params, max_batch=2, max_len=32,
+                        cache="paged", block_size=4, num_blocks=6,
+                        offload=offload)
+    done = tight.run(_mk_requests(cfg))
+    assert _tokens(done) == t_free
+    assert tight.stats.preemptions > 0
+    assert all(r.status == "done" for r in done)
+    if offload == "host":
+        assert tight.stats.offload_bytes > 0
+        assert tight.stats.offload_bytes == tight.stats.restore_bytes
+        assert tight.stats.modeled_offload_tax_s > 0
+    else:
+        assert tight.stats.offload_bytes == 0
+
+
+def test_paged_engine_reset_reproduces(small_model):
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=32,
+                      cache="paged", block_size=4, num_blocks=6,
+                      offload="host")
+    t1 = _tokens(eng.run(_mk_requests(cfg)))
+    eng.reset()
+    assert eng.stats.preemptions == 0 and eng.kv.pool.used_blocks == 0
+    t2 = _tokens(eng.run(_mk_requests(cfg)))
+    assert t1 == t2
+
+
+def test_decode_stall_during_prefill_contention_recovers(small_model):
+    """A decode row that cannot grow while in-flight prefills hold the
+    pool must stall and retry, not crash — only a true deadlock raises."""
+    cfg, params = small_model
+    reqs = dict(n=5, base_plen=6, max_new=6)
+    free = ServeEngine(cfg, params, max_batch=3, max_len=32,
+                       cache="paged", block_size=4)
+    t_free = _tokens(free.run(_mk_requests(cfg, **reqs)))
+    tight = ServeEngine(cfg, params, max_batch=3, max_len=32,
+                        cache="paged", block_size=4, num_blocks=7,
+                        prefill_chunk=3)
+    done = tight.run(_mk_requests(cfg, **reqs))
+    assert _tokens(done) == t_free
+    assert all(r.status == "done" for r in done)
+
+
+def test_pool_too_small_raises(small_model):
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=1, max_len=32,
+                      cache="paged", block_size=4, num_blocks=2)
+    with pytest.raises(RuntimeError, match="pool"):
+        eng.run(_mk_requests(cfg, n=1, base_plen=12, max_new=8))
+
+
+# ------------------------------------------------------------ admit guard
+@pytest.mark.parametrize("cache", ["contiguous", "paged"])
+def test_admit_rejects_overflowing_budget(small_model, cache):
+    """Satellite: plen + budget > max_len is rejected up front instead of
+    risking out-of-bounds KV writes."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=32, cache=cache)
+    bad = Request(0, prompt=list(range(1, 30)), max_new_tokens=16)  # 29+16
+    ok = Request(1, prompt=list(range(1, 28)), max_new_tokens=5)    # 27+5=32
+    done = eng.run([bad, ok])
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[0].status == "rejected" and by_rid[0].generated == []
+    assert by_rid[1].status == "done"
+    assert len(by_rid[1].generated) == 5
+    assert eng.stats.rejected == 1
+    # the rejected request never touched a slot or the KV cache
+    assert eng.stats.prefills == 1
+
+
+# ------------------------------------------------------------ validation
+def test_engine_rejects_bad_cache_config(small_model):
+    cfg, params = small_model
+    with pytest.raises(ValueError, match="cache"):
+        ServeEngine(cfg, params, cache="virtual")
+    with pytest.raises(ValueError, match="offload"):
+        ServeEngine(cfg, params, cache="paged", offload="disk")
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServeEngine(cfg, params, cache="paged", prefill_chunk=0)
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(cfg, params, offload="host")
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(cfg, params, prefill_chunk=8)
+
+
+# ------------------------------------------------------------ offload pricing
+def test_offload_cost_lc_vs_cc():
+    lc, cc = PLATFORMS["Intel+H100"], PLATFORMS["GH200"]
+    nbytes = 1 << 20
+    assert offload_cost_s(lc, nbytes) > offload_cost_s(cc, nbytes)
+    assert offload_cost_s(lc, 0, transfers=2) == \
+        pytest.approx(2 * lc.link_lat_s)
+    with pytest.raises(ValueError):
+        offload_cost_s(lc, -1)
+
+
+def test_host_offload_tier_accounting():
+    tier = HostOffloadTier("Intel+H100")
+    leaves = [np.ones((2, 3, 4), np.float32)]
+    nbytes, tax = tier.evict("r0", leaves, n_blocks=3)
+    assert nbytes == leaves[0].nbytes and tier.holds("r0")
+    assert tier.stored_blocks("r0") == 3
+    assert tax == pytest.approx(
+        offload_cost_s(tier.spec, nbytes, transfers=3))
+    back, n_blocks, rbytes, rtax = tier.restore("r0")
+    assert n_blocks == 3 and rbytes == nbytes and not tier.holds("r0")
+    assert rtax > 0
+    np.testing.assert_array_equal(back[0], leaves[0])
+    assert tier.modeled_tax_s == pytest.approx(tax + rtax)
+    tier.clear()
+    assert tier.offload_bytes == 0
+
+
+def test_memory_pressure_sweep_lc_vs_cc(small_model):
+    """Acceptance: measured offload tax differs between an LC (PCIe) and
+    CC (C2C) device model.  Closed-loop scenario -> identical traffic."""
+    cfg, params = small_model
+    sweep = memory_pressure_sweep(
+        cfg, params, scenario="summarization", platforms=("AMD+A100",
+                                                          "GH200"),
+        pool_fracs=(0.4,), max_batch=2, max_len=32, block_size=4,
+        n_requests=4, seed=0, prompt_cap=12, output_cap=6)
+    lc, cc = sweep["points"]
+    assert lc["coupling"] == "LC" and cc["coupling"] == "CC"
+    assert lc["preemptions"] > 0
+    # identical measured traffic (closed-loop determinism) ...
+    assert lc["offload_bytes"] == cc["offload_bytes"] > 0
+    assert lc["preemptions"] == cc["preemptions"]
+    # ... but the LC link prices it much higher
+    assert lc["modeled_offload_tax_us"] > 2 * cc["modeled_offload_tax_us"]

@@ -1,0 +1,111 @@
+"""Tensor-parallel sharded serving: measured tp=1 vs tp=2 engine decode
+steps on reduced smollm (byte-identical greedy tokens asserted), plus the
+modeled per-layer collective tax of a full-size decode step on LC vs CC
+coupling fabrics — the multi-GPU half of the serving story.
+
+The tp comparison runs in a subprocess with a forced host-platform device
+count (this process may hold a single device); the child prints one
+parseable line per engine and the parent re-emits benchmark rows."""
+from __future__ import annotations
+
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import FAST, csv_row
+from repro.configs import get_config
+from repro.core.device_model import PLATFORMS, allreduce_cost_s
+from repro.telemetry.characterize import decode_collective_sites
+
+ARCH = "smollm-360m"
+DEVICES = 4
+MAX_LEN = 64
+REQUESTS = 4 if FAST else 6
+MAX_NEW = 4 if FAST else 8
+
+_CHILD = """
+import json, jax, numpy as np
+from repro.configs import get_config, reduced
+from repro.inference.engine import Request, ServeEngine
+from repro.models import init_params
+
+cfg = reduced(get_config("{arch}"), n_layers=2)
+params = init_params(jax.random.PRNGKey(0), cfg)
+
+def reqs():
+    rng = np.random.default_rng(0)
+    return [Request(i, prompt=list(rng.integers(0, cfg.vocab_size, 8)),
+                    max_new_tokens={max_new}) for i in range({requests})]
+
+def measure(tp):
+    eng = ServeEngine(cfg, params, max_batch=2, max_len={max_len}, tp=tp)
+    eng.run(reqs())                 # warmup: pay jit/shard_map compiles
+    eng.reset()
+    done = eng.run(reqs())
+    toks = [r.generated for r in sorted(done, key=lambda r: r.rid)]
+    st = eng.stats
+    steps = st.step_times_s
+    return toks, {{
+        "tp": tp,
+        "mean_step_us": 1e6 * sum(steps) / len(steps) if steps else 0.0,
+        "decode_steps": st.decode_steps,
+        "decode_dispatches": st.decode_dispatches,
+        "per_device": st.per_device_dispatches,
+        "collective_bytes_per_step": st.collective_bytes_per_decode_step,
+        "modeled_collective_tax_us": st.modeled_collective_tax_s * 1e6,
+    }}
+
+t1, r1 = measure(1)
+t2, r2 = measure(2)
+assert t1 == t2, ("tp=2 tokens diverged from tp=1", t1, t2)
+print("ROW", json.dumps(r1))
+print("ROW", json.dumps(r2))
+"""
+
+
+def _measure_tp_pair() -> list[dict]:
+    import json
+    import os
+    env = dict(os.environ)
+    env.update({
+        "XLA_FLAGS": f"--xla_force_host_platform_device_count={DEVICES}",
+        "JAX_PLATFORMS": "cpu", "PYTHONPATH": "src"})
+    code = textwrap.dedent(_CHILD).format(
+        arch=ARCH, requests=REQUESTS, max_new=MAX_NEW, max_len=MAX_LEN)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=540)
+    if out.returncode != 0:
+        raise RuntimeError(f"sharded child failed: {out.stderr[-2000:]}")
+    return [json.loads(line.split(" ", 1)[1])
+            for line in out.stdout.splitlines() if line.startswith("ROW")]
+
+
+def run() -> list[str]:
+    rows = []
+    for r in _measure_tp_pair():
+        per_dev = ";".join(f"d{d}={n}" for d, n in
+                           sorted(r["per_device"].items()))
+        rows.append(csv_row(
+            f"sharded_decode/engine_tp{r['tp']}", r["mean_step_us"],
+            f"decode_steps={r['decode_steps']};"
+            f"dispatches={r['decode_dispatches']};{per_dev};"
+            f"coll_B_per_step={r['collective_bytes_per_step']:.0f};"
+            f"coll_tax_us={r['modeled_collective_tax_us']:.1f};"
+            "tokens=byte-identical-vs-tp1"))
+
+    # modeled: per-step collective tax of FULL smollm decode, LC vs CC —
+    # the same per-layer psum payloads the sharded backend captures,
+    # priced per coupling fabric (no weights materialized)
+    cfg = get_config(ARCH)
+    batch, tp = 8, 2
+    sites = [c for c in decode_collective_sites(cfg, batch, 2 * cfg.n_layers)
+             if c]
+    for plat in ("Intel+H100", "GH200"):
+        spec = PLATFORMS[plat]
+        tax = sum(allreduce_cost_s(spec, c, tp) for c in sites)
+        rows.append(csv_row(
+            f"sharded_decode/allreduce_tax_{spec.coupling}", 0.0,
+            f"platform={plat};arch={cfg.name};batch={batch};tp={tp};"
+            f"psums={len(sites)};payload_B={int(sum(sites))};"
+            f"modeled_tax_us={tax * 1e6:.1f}"))
+    return rows

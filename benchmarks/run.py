@@ -36,6 +36,7 @@ BENCHES = [
     ("characterize", "benchmarks.bench_characterize"),    # measured serving
     ("fused_decode", "benchmarks.bench_fused_decode"),    # fusion rules
     ("paged_decode", "benchmarks.bench_paged_decode"),    # paged KV cache
+    ("sharded_decode", "benchmarks.bench_sharded_decode"),  # tensor parallel
 ]
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines.json")

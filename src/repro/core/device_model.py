@@ -116,6 +116,44 @@ def offload_cost_s(platform: PlatformSpec, nbytes: float,
             + nbytes / (platform.link_bw * platform.link_efficiency))
 
 
+def allreduce_cost_s(platform: PlatformSpec, nbytes: float,
+                     tp: int = 1) -> float:
+    """Modeled time for one all-reduce of ``nbytes`` payload across a
+    ``tp``-way tensor-parallel group.
+
+    Ring all-reduce wire model: each device sends/receives
+    ``2*(tp-1)/tp * nbytes`` over the inter-device fabric, paid at the
+    platform's sustained link bandwidth, plus a per-hop latency floor —
+    ``2*(tp-1)`` ring steps.  On LC parts the TP fabric is the same
+    PCIe complex the KV offload crosses; on CC parts it is NVLink-class,
+    so the same ``link_bw`` axis that separates LC/CC offload tax also
+    separates their collective tax (Kundu et al.'s distributed-inference
+    model collapses to this term for decode-size payloads, where latency
+    floors dominate bandwidth).
+    """
+    if nbytes < 0:
+        raise ValueError(f"nbytes must be >= 0, got {nbytes}")
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if tp == 1:
+        return 0.0
+    steps = 2 * (tp - 1)
+    wire = 2.0 * (tp - 1) / tp * nbytes
+    return (steps * platform.link_lat_s
+            + wire / (platform.link_bw * platform.link_efficiency))
+
+
+def dispatch_fanout_s(platform: PlatformSpec, tp: int = 1) -> float:
+    """Modeled host cost of issuing ONE logical launch to ``tp`` device
+    streams: the CPU pays the per-launch overhead once per device (the
+    driver enqueues per-stream), which is exactly how kernel-launch
+    overheads multiply with device count in multi-GPU serving (Chung et
+    al.) — the CPU-bound region widens with tp."""
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    return platform.host_cost_ns * 1e-9 * tp
+
+
 def kernel_duration(platform: PlatformSpec, flops: float, bts: float) -> float:
     """Modeled device time (seconds) for one kernel."""
     t_c = flops / (platform.peak_flops * platform.mxu_efficiency)

@@ -26,6 +26,30 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
                       out_specs=out_specs, **kwargs)
 
 
+def require_device_count(n: int, *, what: str = "mesh") -> None:
+    """Fail fast — and actionably — when a mesh/axis request exceeds the
+    visible device count.
+
+    Without this, ``jax.make_mesh`` surfaces the shortfall as an XLA
+    reshape error deep inside device assignment.  Raised here instead,
+    with the fix inline: on the CPU backend devices are simulated, so the
+    remedy is an env var, not new hardware.
+    """
+    if n < 1:
+        raise ValueError(f"{what} needs a positive device count, got {n}")
+    have = jax.device_count()
+    if n > have:
+        backend = jax.default_backend()
+        hint = (
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"(before importing jax) to simulate {n} host devices"
+            if backend == "cpu" else
+            f"run on a host with >= {n} {backend} devices")
+        raise ValueError(
+            f"{what} needs {n} devices but jax.device_count() == {have} "
+            f"on backend {backend!r}; {hint}")
+
+
 def axis_size(axis_name) -> int:
     """Static size of a named mesh axis, callable inside shard_map.
 

@@ -200,6 +200,28 @@ def cache_specs(cache, cfg: ModelConfig, mesh: Mesh,
     return jax.tree.unflatten(jax.tree.structure(cache), specs)
 
 
+def paged_cache_specs(pages, cfg: ModelConfig, mesh: Mesh,
+                      tp: str = "model"):
+    """Specs for the block-table paged pages pytree (``make_paged_cache``).
+
+    Page pools are global (shared across batch rows through block tables),
+    so there is no batch axis to put ``data`` on; the KV-head axis shards
+    over ``tp`` exactly like the contiguous cache — leaves are
+    ``k_pages``/``v_pages`` shaped (n_sb, P, bs, HKV, hd).  Indivisible
+    head counts fall back to replication (divisibility handled by
+    ``valid_spec``)."""
+    def spec_for(path, leaf):
+        name = getattr(path[-1], "key", getattr(path[-1], "name", ""))
+        if name in ("k_pages", "v_pages"):
+            return valid_spec(leaf.shape, P(None, None, None, tp, None),
+                              mesh)
+        return valid_spec(leaf.shape, P(*(None,) * len(leaf.shape)), mesh)
+
+    flat = jax.tree_util.tree_flatten_with_path(pages)[0]
+    specs = [spec_for(p, leaf) for p, leaf in flat]
+    return jax.tree.unflatten(jax.tree.structure(pages), specs)
+
+
 # ------------------------------------------------------------------ activations
 def make_shd(mesh: Mesh, dp=("data",), tp: str = "model",
              seq_shard: bool = False):

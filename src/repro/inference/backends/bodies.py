@@ -1,0 +1,78 @@
+"""The four serving step bodies, shared by every execution backend.
+
+One source of numerics: ``LocalBackend`` jits/plans these directly;
+``ShardedBackend`` builds them with its per-device config and a psum
+``reduce`` hook and wraps them in shard_map.  The tp=1 vs tp=2
+byte-identical-tokens guarantee rests on both backends running THIS
+code — keep anything that changes logits or cache writes here.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward
+
+
+class StepBodies(NamedTuple):
+    """Pure step functions: (params, cache, ...) -> (logits_row, cache)."""
+    prefill: callable          # contiguous prefill of one slot
+    decode: callable           # batched contiguous decode step
+    paged_prefill: callable    # one paged prefill chunk
+    paged_decode: callable     # batched paged decode step
+
+
+def make_step_bodies(cfg: ModelConfig, reduce=None) -> StepBodies:
+    """Build the step bodies for one (possibly per-device) config.
+
+    ``reduce``: tensor-parallel output hook forwarded to the model
+    (psum inside shard_map; None on a single device).  ``unroll=True``
+    runs the layer stack as a python loop — the planned modes trace with
+    it so the per-layer kernel stream stays visible to proximity mining.
+    """
+
+    def prefill_body(params, cache, tokens, slot, plen, unroll=False):
+        # tokens: (1, plen_padded); writes slot's KV rows.  The slot's
+        # sub-cache is ZEROED first — recurrent states (rwkv/mamba) from
+        # a previous occupant must not leak into the new request.
+        sub = jax.tree.map(
+            lambda c: jnp.zeros_like(
+                jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1)),
+            cache)
+        logits, _, sub2 = forward(params, tokens, cfg, cache=sub,
+                                  cache_index=jnp.zeros((), jnp.int32),
+                                  unroll=unroll, reduce=reduce)
+        cache2 = jax.tree.map(
+            lambda c, s_: jax.lax.dynamic_update_slice_in_dim(
+                c, s_.astype(c.dtype), slot, axis=1), cache, sub2)
+        return logits[:, plen - 1], cache2
+
+    def decode_body(params, cache, tokens, lengths, unroll=False):
+        logits, _, cache2 = forward(params, tokens, cfg, cache=cache,
+                                    lengths=lengths, unroll=unroll,
+                                    reduce=reduce)
+        return logits[:, 0], cache2
+
+    def paged_prefill_body(params, cache, tokens, bt_row, t0, unroll=False):
+        # tokens: (1, C) one chunk; bt_row: (NB,) the slot's block
+        # table; t0: chunk start offset (traced — one compile per
+        # chunk LENGTH, not per position)
+        logits, _, cache2 = forward(params, tokens, cfg, cache=cache,
+                                    cache_index=t0,
+                                    block_tables=bt_row[None],
+                                    unroll=unroll, reduce=reduce)
+        return logits[:, -1], cache2
+
+    def paged_decode_body(params, cache, tokens, lengths, block_tables,
+                          unroll=False):
+        logits, _, cache2 = forward(params, tokens, cfg, cache=cache,
+                                    lengths=lengths,
+                                    block_tables=block_tables,
+                                    unroll=unroll, reduce=reduce)
+        return logits[:, 0], cache2
+
+    return StepBodies(prefill_body, decode_body, paged_prefill_body,
+                      paged_decode_body)

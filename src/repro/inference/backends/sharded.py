@@ -1,0 +1,227 @@
+"""Tensor-parallel sharded execution backend (Megatron-style, shard_map).
+
+Params are sharded over a ``(data=1, model=tp)`` host mesh with the
+existing sharding-rule engine (``distributed.sharding.param_specs`` /
+``cache_specs`` / ``paged_cache_specs`` + ``launch.mesh.make_host_mesh``):
+wq/wk/wv column-sharded by head, wo row-sharded, MLP d_ff split, KV caches
+(contiguous and paged) head-sharded.  The prefill/decode bodies run under
+``shard_map`` (via the version shims in ``distributed.compat``) with a
+PER-DEVICE config — ``n_heads/tp`` local heads — and the model's
+``reduce`` hook psums the partial attention/MLP outputs over the model
+axis.  Embeddings and the LM head stay replicated, so every device holds
+identical activations between blocks and the greedy tokens are the same
+ones the single-device ``LocalBackend`` emits.
+
+Accounting is the point: each step is ONE executable but ``tp`` device
+dispatch streams (``CallAccount.dispatches = tp`` — the per-device launch
+multiplication of Chung et al.), and every psum the body issues is
+captured AT TRACE TIME (name + payload bytes) then priced over the
+platform's coupling link via ``core.device_model.allreduce_cost_s`` — the
+LC/PCIe vs CC/NVLink-C2C axis applied to tensor-parallel serving.
+
+Runs on CPU CI: ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+simulates the device pool (``make_host_mesh`` validates and says exactly
+that when devices are short).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.device_model import PLATFORMS, allreduce_cost_s
+from repro.distributed.compat import shard_map
+from repro.distributed.sharding import (cache_specs, paged_cache_specs,
+                                        param_specs, shardings_for)
+from repro.inference.backends.base import (AccountingMixin, BackendInfo,
+                                           CallAccount)
+from repro.inference.backends.bodies import make_step_bodies
+from repro.launch.mesh import make_host_mesh
+from repro.models import make_cache
+
+_SUPPORTED_KINDS = ("attn", "attn_local")
+
+
+def _validate_tp(cfg: ModelConfig, tp: int) -> None:
+    if tp < 2:
+        raise ValueError(f"ShardedBackend needs tp >= 2, got {tp} "
+                         "(use LocalBackend for single-device serving)")
+    bad = [k for k in cfg.block_pattern if k not in _SUPPORTED_KINDS]
+    if bad or cfg.moe_slots or cfg.n_encoder_layers:
+        raise ValueError(
+            f"ShardedBackend supports pure-attention decoder stacks; "
+            f"{cfg.name} has block kinds {bad or cfg.block_pattern}, "
+            f"moe_slots={cfg.moe_slots}, "
+            f"n_encoder_layers={cfg.n_encoder_layers}")
+    for dim, val in (("n_heads", cfg.n_heads),
+                     ("n_kv_heads", cfg.n_kv_heads),
+                     ("d_ff", cfg.d_ff)):
+        if val % tp:
+            raise ValueError(
+                f"tp={tp} must divide {dim}={val} for {cfg.name}: the "
+                f"shard_map body runs {dim}//tp per device (pick a tp "
+                f"from the divisors of {val}, or serve this arch with "
+                f"tp=1)")
+
+
+class ShardedBackend(AccountingMixin):
+    """Head-sharded tensor-parallel backend over a host/device mesh."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int,
+                 max_len: int, tp: int, platform: str = "TPU-v5e",
+                 plan: str = "jit"):
+        if plan != "jit":
+            raise ValueError(
+                f"ShardedBackend executes plan='jit' only (got {plan!r}): "
+                "the launch-plan runtime replays single-device kernel "
+                "streams and cannot re-dispatch shard_map bodies; "
+                "per-device launch pricing for tp>1 comes from "
+                "Planner(tp=...) / telemetry.characterize.tp_sweep")
+        _validate_tp(cfg, tp)
+        self.cfg = cfg
+        self.tp = tp
+        self.B = max_batch
+        self.T = max_len
+        self.plan = plan
+        self.platform = platform
+        self.spec = PLATFORMS[platform]
+        # raises the actionable device-count error when the pool is short
+        self.mesh = make_host_mesh(data=1, model=tp)
+        self.info = BackendInfo(
+            kind="sharded", tp=tp,
+            devices=tuple(d.id for d in self.mesh.devices.flat))
+        self._init_accounting()
+        # per-device view: the body reshapes local projections with LOCAL
+        # head counts (head_dim pinned — d_model//n_heads_local is wrong)
+        self.cfg_local = cfg.replace(n_heads=cfg.n_heads // tp,
+                                     n_kv_heads=cfg.n_kv_heads // tp,
+                                     head_dim=cfg.hd)
+        specs = param_specs(params, cfg, self.mesh, tp="model")
+        # embeddings + unembed stay replicated: every device computes the
+        # full (tiny at decode) logits row, so out_specs need no gather
+        specs = dict(specs)
+        specs["embed"] = P(None, None)
+        if "lm_head" in specs:
+            specs["lm_head"] = P(None, None)
+        self.param_spec_tree = specs
+        self.params = jax.device_put(
+            params, shardings_for(params, specs, self.mesh))
+        self._cache_spec_tree = None        # set by init_*_cache
+        self._fns: dict = {}                # key -> jitted shard_map fn
+        self._profiles: dict = {}           # key -> ((name, bytes), ...)
+        self._trace_log: list = []          # filled by reduce() at trace time
+
+        def reduce(name, x):
+            # trace-time capture: one entry per psum ISSUED IN THE TRACED
+            # BODY (the superblock scan body traces once — scale by
+            # n_superblocks at accounting time); x.shape is the local
+            # (per-device) payload entering the collective
+            self._trace_log.append(
+                (name, int(x.size) * x.dtype.itemsize))
+            return jax.lax.psum(x, "model")
+
+        self._reduce = reduce
+        # IDENTICAL numerics to LocalBackend (bodies.py), instantiated
+        # with the per-device config + psum hook — the byte-identical
+        # tokens guarantee is structural, not hand-synchronized
+        bodies = make_step_bodies(self.cfg_local, reduce=reduce)
+        self._prefill_body = bodies.prefill
+        self._decode_body = bodies.decode
+        self._paged_prefill_body = bodies.paged_prefill
+        self._paged_decode_body = bodies.paged_decode
+
+    # ------------------------------------------------------------ caches
+    def init_contiguous_cache(self):
+        cache = make_cache(self.cfg, self.B, self.T, src_len=1,
+                           dtype=self.cfg.cdtype)
+        specs = cache_specs(cache, self.cfg, self.mesh, dp=("data",),
+                            tp="model")
+        self._cache_spec_tree = specs
+        return jax.device_put(cache,
+                              shardings_for(cache, specs, self.mesh))
+
+    def init_paged_cache(self, kv):
+        pages = kv.make_pages()
+        specs = paged_cache_specs(pages, self.cfg, self.mesh, tp="model")
+        self._cache_spec_tree = specs
+        return jax.device_put(pages,
+                              shardings_for(pages, specs, self.mesh))
+
+    # ------------------------------------------------------------ dispatch
+    def _wrapped(self, key, body, arg_specs):
+        """jit(shard_map(body)) for one step kind, built lazily once the
+        cache spec tree exists (cache structure fixes in_specs)."""
+        fn = self._fns.get(key)
+        if fn is None:
+            if self._cache_spec_tree is None:
+                raise RuntimeError(
+                    "backend cache not initialized; call "
+                    "init_contiguous_cache()/init_paged_cache() first")
+            in_specs = (self.param_spec_tree, self._cache_spec_tree,
+                        *arg_specs)
+            out_specs = (P(None, None), self._cache_spec_tree)
+            fn = jax.jit(shard_map(
+                body, mesh=self.mesh, in_specs=in_specs,
+                out_specs=out_specs, check_vma=False))
+            self._fns[key] = fn
+        return fn
+
+    def _call(self, key, fn, args):
+        mark = len(self._trace_log)
+        t0 = time.perf_counter()
+        logits, cache = fn(self.params, *args)
+        host = time.perf_counter() - t0
+        new = self._trace_log[mark:]
+        del self._trace_log[mark:]
+        if new:
+            self._profiles[key] = tuple(new)
+        prof = self._profiles.get(key, ())
+        # the superblock scan body traces once but runs n_superblocks
+        # times: every captured psum fires once per superblock
+        n_sb = self.cfg.n_superblocks
+        payload = sum(b for _, b in prof) * n_sb
+        tax = n_sb * sum(allreduce_cost_s(self.spec, b, self.tp)
+                         for _, b in prof)
+        self._charge(CallAccount(
+            dispatches=self.tp, host_time_s=host,
+            collectives=len(prof) * n_sb, collective_bytes=payload,
+            modeled_collective_tax_s=tax))
+        return logits, cache
+
+    # ------------------------------------------------------------ steps
+    def prefill(self, cache, tokens, slot: int, plen: int):
+        key = ("prefill", tokens.shape[1], plen)
+        fn = self._fns.get(key)
+        if fn is None:
+            def body(params, cache, tokens, slot):
+                return self._prefill_body(params, cache, tokens, slot, plen)
+            fn = self._wrapped(key, body, (P(None, None), P()))
+        return self._call(key, fn, (cache, tokens,
+                                    jnp.asarray(slot, jnp.int32)))
+
+    def decode(self, cache, tokens, lengths):
+        key = ("decode",)
+        fn = self._fns.get(key) or self._wrapped(
+            key, self._decode_body, (P(None, None), P(None)))
+        return self._call(key, fn, (cache, tokens, lengths))
+
+    def prefill_chunk(self, cache, tokens, bt_row, t0_index):
+        key = ("prefill_chunk", tokens.shape[1])
+        fn = self._fns.get(key) or self._wrapped(
+            key, self._paged_prefill_body, (P(None, None), P(None), P()))
+        return self._call(key, fn, (cache, tokens, bt_row, t0_index))
+
+    def paged_decode(self, cache, tokens, lengths, block_tables):
+        key = ("paged_decode",)
+        fn = self._fns.get(key) or self._wrapped(
+            key, self._paged_decode_body,
+            (P(None, None), P(None), P(None, None)))
+        return self._call(key, fn, (cache, tokens, lengths, block_tables))
+
+    # ------------------------------------------------------- accounting
+    @property
+    def planned_decode(self):
+        return None

@@ -1,37 +1,37 @@
-"""Continuous-batching serving engine (Orca/vLLM-style slot scheduler).
+"""Continuous-batching serving SCHEDULER (Orca/vLLM-style slot scheduler).
 
-A fixed pool of B slots shares one batched KV cache.  New requests prefill
-into a free slot (prompt lengths padded to power-of-two buckets to bound
-recompiles); every engine step decodes ALL active slots in one batched
-step with per-slot lengths; finished slots free immediately and are refilled
-from the queue — no head-of-line blocking on long generations.
+This module is the policy half of the engine: a fixed pool of B slots, new
+requests prefill into a free slot (prompt lengths padded to power-of-two
+buckets to bound recompiles), every step decodes ALL active slots in one
+batched step with per-slot lengths, finished slots free immediately and
+are refilled from the queue — no head-of-line blocking.  Under
+``cache="paged"`` it also runs chunked prefill, the evict-or-preempt
+policy, and the host-offload tier over ``repro.kvcache`` block tables.
 
-Execution plans: ``plan="jit"`` (default) runs prefill/decode as plain
-``jax.jit`` closures.  Any other strategy routes both through the
-launch-plan runtime (``repro.runtime``): the step function is traced once,
-a ``LaunchPlan`` is chosen (``eager`` / ``whole_graph`` / ``chain`` /
-cost-aware ``auto`` / ``fused`` rule-substituted Pallas kernels), and
-each step executes the plan's compiled segments — so ``EngineStats`` can
-report real per-step dispatch counts and the modeled TKLQT of the
-serving hot path, the paper's serving-time story.
+Everything device-side lives behind the ``ExecutionBackend`` protocol
+(``repro.inference.backends``): cache construction/placement, the four
+step kinds, plan/fusion dispatch, and per-device launch accounting.  The
+scheduler never touches meshes, shard_map, or placement — it manipulates
+``Request`` objects, numpy block tables, and whatever cache pytree the
+backend hands back.  Backends:
 
-``plan="autotuned"`` resolves the concrete strategy from a persisted
-plan table (``repro.runtime.autotune``) keyed by this engine's slot
-count — the measured characterize -> autotune -> serve loop.
+  * ``tp=1`` -> ``LocalBackend``: the single-device path; ``plan="jit"``
+    runs whole-step jit closures, any other strategy routes through the
+    launch-plan runtime (``repro.runtime``) so ``EngineStats`` reports
+    real dispatch counts and modeled TKLQT (``plan="autotuned"`` resolves
+    the strategy from a measured plan table).
+  * ``tp>1`` -> ``ShardedBackend``: tensor-parallel shard_map serving;
+    params/KV head-sharded over a device mesh, per-device dispatch
+    streams and collective traffic (psum payloads priced over the
+    platform's coupling link) surfaced in ``EngineStats``.
 
-KV caches: ``cache="contiguous"`` (default) pre-carves one ``max_len``
-KV region per slot.  ``cache="paged"`` replaces it with the block-table
-paged allocator of ``repro.kvcache``: fixed-size token pages from one
-pool, chunked prefill (long prompts no longer monopolize the engine),
-an evict-or-preempt policy under pool pressure (``offload="host"``
-stages cold blocks in host memory priced by the platform's coupling
-link; ``offload="none"`` discards and recomputes on resume), and
-``EngineStats`` counters for pool utilization / preemptions / offload
-traffic.
+Because admission, preemption, and sampling are scheduler-side and the
+backends agree numerically, ``ServeEngine(tp=2)`` drains any workload —
+including admit -> preempt -> resume under pool pressure — with greedy
+tokens byte-identical to ``tp=1``.
 """
 from __future__ import annotations
 
-import functools
 import math
 import time
 from dataclasses import dataclass, field
@@ -42,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import forward, make_cache
+from repro.inference.backends import CallAccount, make_backend
 from repro.telemetry.metrics import RequestTiming
 
 PLAN_STRATEGIES = ("jit", "eager", "whole_graph", "chain", "auto", "fused",
@@ -91,6 +91,13 @@ class EngineStats:
     measured_dispatch_s: float = 0.0  # measured host launch tax (all steps)
     decode_dispatch_time_s: float = 0.0  # measured launch tax, decode only
     step_times_s: list = field(default_factory=list)  # decode step durations
+    # ---- tensor parallelism (tp=1: one stream, zero collective traffic)
+    tp: int = 1                    # device streams every dispatch fans to
+    per_device_dispatches: dict = field(default_factory=dict)
+    collectives: int = 0           # collective ops issued (psums)
+    collective_bytes: int = 0      # payload bytes entering collectives
+    decode_collective_bytes: int = 0  # decode-step-only share of the above
+    modeled_collective_tax_s: float = 0.0  # priced over the coupling link
     # ---- paged KV cache (cache="paged"; zero/empty under contiguous)
     rejected: int = 0              # admit() guard: plen + budget > max_len
     preemptions: int = 0           # slots evicted under block-pool pressure
@@ -161,76 +168,21 @@ class EngineStats:
         return (self.decode_dispatch_time_s / self.decode_steps
                 if self.decode_steps else 0.0)
 
-
-class _PlannedFn:
-    """One engine callable routed through the launch-plan runtime.
-
-    Traced and planned lazily on first call (shapes are only known then);
-    afterwards every call executes the chosen plan's compiled segments,
-    which are shared process-wide via the runtime's segment cache.
-    """
-
-    def __init__(self, fn, strategy: str, platform: str,
-                 lengths=(2, 4, 8, 16, 32)):
-        self.fn = fn
-        self.strategy = strategy
-        self.platform = platform
-        self.lengths = lengths
-        self.executor = None
-        self.plan = None                # chosen LaunchPlan (after _build)
-        self.modeled_tklqt_s = 0.0      # modeled TKLQT of ONE invocation
-        self.modeled_events = []        # simulated device timeline, one call
-        self.last_host_times = []       # measured per-segment dispatch, last call
-
-    def _build(self, *args):
-        from repro.core.tracing import trace_fn
-        from repro.runtime import LaunchPlan, PlanExecutor, Planner
-        trace = trace_fn(self.fn, *args)
-        planner = Planner(trace, self.platform)
-        n = len(trace.kernels)
-        if self.strategy == "eager":
-            plan = LaunchPlan.eager(n)
-        elif self.strategy == "whole_graph":
-            plan = LaunchPlan.whole_graph(n)
-        elif self.strategy == "chain":
-            plan = planner.compare(
-                [planner.chain(L) for L in self.lengths])[0].plan
-        elif self.strategy == "auto":
-            plan = planner.auto(lengths=self.lengths).plan
-        elif self.strategy == "fused":
-            plan = planner.fused_rules(lengths=self.lengths)
-        else:
-            raise ValueError(f"unknown plan strategy {self.strategy!r}; "
-                             f"expected one of {PLAN_STRATEGIES}")
-        self.plan = plan
-        self.executor = PlanExecutor(trace, plan)
-        self.modeled_tklqt_s = planner.evaluate(plan).tklqt
-        from repro.runtime.planner import simulate_plan
-        self.modeled_events = simulate_plan(trace.kernels, plan, planner.spec)
-        from repro.runtime.plan import segment_label
-        self.segment_names = [segment_label(trace.kernels, s)
-                              for s in plan.segments]
-
-    def __call__(self, *args):
-        if self.executor is None:
-            self._build(*args)
-        out, self.last_host_times = self.executor.call_timed(*args)
-        return out
-
     @property
-    def n_launches(self) -> int:
-        return self.executor.n_launches if self.executor else 0
-
-    @property
-    def rule_names(self) -> list:
-        return self.plan.rule_names() if self.plan is not None else []
+    def collective_bytes_per_decode_step(self) -> float:
+        """Decode-only psum payload per decode step (prefill psums are
+        tracked in ``collective_bytes`` but excluded here, so the figure
+        is a property of the decode step, not the workload shape)."""
+        return (self.decode_collective_bytes / self.decode_steps
+                if self.decode_steps else 0.0)
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  max_len: int = 256, greedy: bool = True,
                  plan: str = "jit", platform: str = "TPU-v5e",
-                 plan_table=None, telemetry=None,
+                 plan_table=None, telemetry=None, tp: int = 1,
+                 backend=None,
                  cache: str = "contiguous", block_size: int = 16,
                  num_blocks: Optional[int] = None, offload: str = "none",
                  prefill_chunk: Optional[int] = None):
@@ -240,6 +192,8 @@ class ServeEngine:
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch} "
                              "(an engine with no slots can never admit)")
+        if tp < 1:
+            raise ValueError(f"tp must be >= 1, got {tp}")
         if cache not in CACHE_MODES:
             raise ValueError(f"unknown cache {cache!r}; "
                              f"expected one of {CACHE_MODES}")
@@ -290,6 +244,13 @@ class ServeEngine:
         self.T = max_len
         self.cache_mode = cache
         self.prefill_chunk = prefill_chunk
+        # the backend owns everything device-side (placement, meshes,
+        # compiled steps); pass backend= to serve through a custom one
+        self.backend = backend if backend is not None else make_backend(
+            cfg, params, max_batch=max_batch, max_len=max_len, tp=tp,
+            plan=plan, platform=platform)
+        # derived, not stored: an injected backend= decides the degree
+        self.tp = self.backend.info.tp
         if cache == "paged":
             from repro.kvcache import (HostOffloadTier, PagedKVCache,
                                        default_num_blocks)
@@ -298,21 +259,21 @@ class ServeEngine:
             self.kv = PagedKVCache(cfg, num_blocks=nb,
                                    block_size=block_size, max_len=max_len,
                                    dtype=cfg.cdtype)
-            self.cache = self.kv.make_pages()
+            self.cache = self.backend.init_paged_cache(self.kv)
             self.offload_tier = (HostOffloadTier(platform)
                                  if offload == "host" else None)
         else:
             self.kv = None
             self.offload_tier = None
-            self.cache = make_cache(cfg, max_batch, max_len, src_len=1,
-                                    dtype=cfg.cdtype)
+            self.cache = self.backend.init_contiguous_cache()
         self._prefill_tasks: dict = {}      # slot -> _PrefillTask
         self._preempted: list = []          # evicted Requests awaiting resume
         self._admit_seq = 0                 # victim ordering (youngest first)
         self._last_step_progressed = True
         self.lengths = np.zeros(max_batch, np.int32)
         self.slots: list[Optional[Request]] = [None] * max_batch
-        self.stats = EngineStats(plan=self.plan_label)
+        self.stats = EngineStats(plan=self.plan_label, tp=self.backend.info.tp)
+        self._dev_base = self.backend.device_dispatches  # reset() baseline
         self.greedy = greedy
         self.plan = plan
         self.platform = platform
@@ -321,65 +282,18 @@ class ServeEngine:
         # while the engine works, jumps forward over idle gaps so open-loop
         # arrival schedules don't cost real wall time to honor
         self.now = 0.0
-        self._planned_prefill: dict = {}    # (bucket, plen) -> _PlannedFn
-        self._planned_decode: Optional[_PlannedFn] = None
-
-        def prefill_body(params, cache, tokens, slot, plen, unroll=False):
-            # tokens: (1, plen_padded); writes slot's KV rows.  The slot's
-            # sub-cache is ZEROED first — recurrent states (rwkv/mamba) from
-            # a previous occupant must not leak into the new request.
-            sub = jax.tree.map(
-                lambda c: jnp.zeros_like(
-                    jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1)),
-                cache)
-            logits, _, sub2 = forward(params, tokens, cfg, cache=sub,
-                                      cache_index=jnp.zeros((), jnp.int32),
-                                      unroll=unroll)
-            cache2 = jax.tree.map(
-                lambda c, s_: jax.lax.dynamic_update_slice_in_dim(
-                    c, s_.astype(c.dtype), slot, axis=1), cache, sub2)
-            return logits[:, plen - 1], cache2
-
-        def decode_body(params, cache, tokens, lengths, unroll=False):
-            logits, _, cache2 = forward(params, tokens, cfg, cache=cache,
-                                        lengths=lengths, unroll=unroll)
-            return logits[:, 0], cache2
-
-        def paged_prefill_body(params, cache, tokens, bt_row, t0,
-                               unroll=False):
-            # tokens: (1, C) one chunk; bt_row: (NB,) the slot's block
-            # table; t0: chunk start offset (traced — one compile per
-            # chunk LENGTH, not per position)
-            logits, _, cache2 = forward(params, tokens, cfg, cache=cache,
-                                        cache_index=t0,
-                                        block_tables=bt_row[None],
-                                        unroll=unroll)
-            return logits[:, -1], cache2
-
-        def paged_decode_body(params, cache, tokens, lengths, block_tables,
-                              unroll=False):
-            logits, _, cache2 = forward(params, tokens, cfg, cache=cache,
-                                        lengths=lengths,
-                                        block_tables=block_tables,
-                                        unroll=unroll)
-            return logits[:, 0], cache2
-
-        self._prefill = jax.jit(prefill_body, static_argnames=("plen",))
-        self._decode = jax.jit(decode_body)
-        self._prefill_paged = jax.jit(paged_prefill_body)
-        self._decode_paged = jax.jit(paged_decode_body)
-        # planned modes trace with unroll=True: the unrolled layer stack
-        # gives the periodic kernel stream proximity mining feeds on
-        self._prefill_body = prefill_body
-        self._decode_body = decode_body
-        self._paged_prefill_body = paged_prefill_body
-        self._paged_decode_body = paged_decode_body
 
     # ------------------------------------------------------------ internals
     @property
     def timings(self) -> dict:
         """Per-request RequestTiming objects (lives on stats)."""
         return self.stats.timings
+
+    @property
+    def _planned_decode(self):
+        """The decode _PlannedFn when a launch-plan mode is active
+        (kept as an engine attribute for telemetry/tests compat)."""
+        return self.backend.planned_decode
 
     @staticmethod
     def _bucket(n: int) -> int:
@@ -394,14 +308,35 @@ class ServeEngine:
     def _sample(self, logits_row) -> int:
         return int(jnp.argmax(logits_row))
 
-    def _record_segments(self, pf: _PlannedFn, t_begin: float) -> None:
+    def _absorb(self, acct: CallAccount, *, decode: bool) -> None:
+        """Fold one backend call's accounting into EngineStats — the one
+        merge path shared by jit, planned, and sharded execution."""
+        if decode:
+            self.stats.decode_dispatches += acct.dispatches
+            self.stats.decode_dispatch_time_s += acct.host_time_s
+            self.stats.fused_dispatches += len(acct.rule_names)
+            self.stats.decode_collective_bytes += acct.collective_bytes
+        else:
+            self.stats.prefill_dispatches += acct.dispatches
+        self.stats.measured_dispatch_s += acct.host_time_s
+        self.stats.modeled_tklqt_s += acct.modeled_tklqt_s
+        for nm in acct.rule_names:
+            self.stats.rule_hits[nm] = self.stats.rule_hits.get(nm, 0) + 1
+        self.stats.collectives += acct.collectives
+        self.stats.collective_bytes += acct.collective_bytes
+        self.stats.modeled_collective_tax_s += acct.modeled_collective_tax_s
+        self.stats.per_device_dispatches = {
+            d: n - self._dev_base.get(d, 0)
+            for d, n in self.backend.device_dispatches.items()}
+
+    def _record_segments(self, acct: CallAccount, t_begin: float) -> None:
         """Per-segment dispatch spans on the engine clock: the measured
         host times of the last planned call, laid out back-to-back from
         the step's start (tid 1 of the merged Chrome trace)."""
         if self.telemetry is None or not self.telemetry.enabled:
             return
         t = t_begin
-        for name, h in zip(pf.segment_names, pf.last_host_times):
+        for name, h in zip(acct.segment_names, acct.segment_host_times):
             self.telemetry.add(name, "dispatch", t, t + h, tid=1)
             t += h
 
@@ -427,26 +362,10 @@ class ServeEngine:
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :plen] = req.prompt
         t0 = time.perf_counter()
-        if self.plan == "jit":
-            logits, self.cache = self._prefill(
-                self.params, self.cache, jnp.asarray(toks), slot, plen)
-            self.stats.prefill_dispatches += 1
-            self.stats.measured_dispatch_s += time.perf_counter() - t0
-        else:
-            pf = self._planned_prefill.get((bucket, plen))
-            if pf is None:
-                fn = functools.partial(self._prefill_body, plen=plen,
-                                       unroll=True)
-                pf = _PlannedFn(fn, self.plan, self.platform)
-                self._planned_prefill[(bucket, plen)] = pf
-            logits, self.cache = pf(self.params, self.cache,
-                                    jnp.asarray(toks),
-                                    jnp.asarray(slot, jnp.int32))
-            self.stats.prefill_dispatches += pf.n_launches
-            self.stats.modeled_tklqt_s += pf.modeled_tklqt_s
-            self.stats.measured_dispatch_s += sum(pf.last_host_times)
-            for nm in pf.rule_names:
-                self.stats.rule_hits[nm] = self.stats.rule_hits.get(nm, 0) + 1
+        logits, self.cache = self.backend.prefill(
+            self.cache, jnp.asarray(toks), slot, plen)
+        acct = self.backend.last
+        self._absorb(acct, decode=False)
         first = self._sample(logits[0])
         dt = time.perf_counter() - t0
         t_begin = self.now
@@ -470,9 +389,7 @@ class ServeEngine:
         if self.telemetry is not None:
             self.telemetry.add(f"prefill[{plen}]", "prefill", t_begin,
                                self.now, rid=req.rid, slot=slot, plen=plen)
-            if self.plan != "jit":
-                self._record_segments(
-                    self._planned_prefill[(bucket, plen)], t_begin)
+            self._record_segments(acct, t_begin)
         return True
 
     # ------------------------------------------------------------ paged api
@@ -593,24 +510,10 @@ class ServeEngine:
         bt = jnp.asarray(self.kv.table_row(task.req.rid))
         t0c = jnp.asarray(task.pos, jnp.int32)
         t_start = time.perf_counter()
-        if self.plan == "jit":
-            logits, self.cache = self._prefill_paged(
-                self.params, self.cache, jnp.asarray(toks), bt, t0c)
-            self.stats.prefill_dispatches += 1
-            self.stats.measured_dispatch_s += time.perf_counter() - t_start
-        else:
-            pf = self._planned_prefill.get(("paged", chunk_len))
-            if pf is None:
-                fn = functools.partial(self._paged_prefill_body, unroll=True)
-                pf = _PlannedFn(fn, self.plan, self.platform)
-                self._planned_prefill[("paged", chunk_len)] = pf
-            logits, self.cache = pf(self.params, self.cache,
-                                    jnp.asarray(toks), bt, t0c)
-            self.stats.prefill_dispatches += pf.n_launches
-            self.stats.modeled_tklqt_s += pf.modeled_tklqt_s
-            self.stats.measured_dispatch_s += sum(pf.last_host_times)
-            for nm in pf.rule_names:
-                self.stats.rule_hits[nm] = self.stats.rule_hits.get(nm, 0) + 1
+        logits, self.cache = self.backend.prefill_chunk(
+            self.cache, jnp.asarray(toks), bt, t0c)
+        acct = self.backend.last
+        self._absorb(acct, decode=False)
         task.last_logits = logits
         task.pos += chunk_len
         self.stats.prefill_chunks += 1
@@ -621,9 +524,7 @@ class ServeEngine:
             self.telemetry.add(f"prefill_chunk[{chunk_len}]", "prefill",
                                t_begin, self.now, rid=task.req.rid,
                                slot=task.slot, pos=task.pos)
-            if self.plan != "jit":
-                self._record_segments(
-                    self._planned_prefill[("paged", chunk_len)], t_begin)
+            self._record_segments(acct, t_begin)
 
     def _finish_prefill(self, task: _PrefillTask) -> None:
         req, slot = task.req, task.slot
@@ -695,32 +596,10 @@ class ServeEngine:
                   for i in range(self.B)]
         bt = jnp.asarray(self.kv.block_tables(owners))
         t0 = time.perf_counter()
-        if self.plan == "jit":
-            logits, self.cache = self._decode_paged(
-                self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(self.lengths), bt)
-            self.stats.decode_dispatches += 1
-            disp = time.perf_counter() - t0
-            self.stats.measured_dispatch_s += disp
-            self.stats.decode_dispatch_time_s += disp
-        else:
-            if self._planned_decode is None:
-                self._planned_decode = _PlannedFn(
-                    functools.partial(self._paged_decode_body, unroll=True),
-                    self.plan, self.platform)
-            logits, self.cache = self._planned_decode(
-                self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(self.lengths), bt)
-            self.stats.decode_dispatches += self._planned_decode.n_launches
-            self.stats.fused_dispatches += \
-                len(self._planned_decode.rule_names)
-            for nm in self._planned_decode.rule_names:
-                self.stats.rule_hits[nm] = self.stats.rule_hits.get(nm, 0) + 1
-            self.stats.modeled_tklqt_s += \
-                self._planned_decode.modeled_tklqt_s
-            disp = sum(self._planned_decode.last_host_times)
-            self.stats.measured_dispatch_s += disp
-            self.stats.decode_dispatch_time_s += disp
+        logits, self.cache = self.backend.paged_decode(
+            self.cache, jnp.asarray(toks), jnp.asarray(self.lengths), bt)
+        acct = self.backend.last
+        self._absorb(acct, decode=True)
         self.stats.decode_steps += 1
         self.stats.slot_occupancy.append(len(active))
         self.stats.block_pool_utilization.append(self.kv.pool.utilization)
@@ -732,8 +611,7 @@ class ServeEngine:
         if self.telemetry is not None:
             self.telemetry.add(f"decode[b={len(active)}]", "decode",
                                t_begin, self.now, batch=len(active))
-            if self.plan != "jit":
-                self._record_segments(self._planned_decode, t_begin)
+            self._record_segments(acct, t_begin)
         for i in active:
             req = self.slots[i]
             self.lengths[i] += 1
@@ -766,32 +644,10 @@ class ServeEngine:
         for i in active:
             toks[i, 0] = self.slots[i].generated[-1]
         t0 = time.perf_counter()
-        if self.plan == "jit":
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(self.lengths))
-            self.stats.decode_dispatches += 1
-            disp = time.perf_counter() - t0
-            self.stats.measured_dispatch_s += disp
-            self.stats.decode_dispatch_time_s += disp
-        else:
-            if self._planned_decode is None:
-                self._planned_decode = _PlannedFn(
-                    functools.partial(self._decode_body, unroll=True),
-                    self.plan, self.platform)
-            logits, self.cache = self._planned_decode(
-                self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(self.lengths))
-            self.stats.decode_dispatches += self._planned_decode.n_launches
-            self.stats.fused_dispatches += \
-                len(self._planned_decode.rule_names)
-            for nm in self._planned_decode.rule_names:
-                self.stats.rule_hits[nm] = self.stats.rule_hits.get(nm, 0) + 1
-            self.stats.modeled_tklqt_s += \
-                self._planned_decode.modeled_tklqt_s
-            disp = sum(self._planned_decode.last_host_times)
-            self.stats.measured_dispatch_s += disp
-            self.stats.decode_dispatch_time_s += disp
+        logits, self.cache = self.backend.decode(
+            self.cache, jnp.asarray(toks), jnp.asarray(self.lengths))
+        acct = self.backend.last
+        self._absorb(acct, decode=True)
         self.stats.decode_steps += 1
         self.stats.slot_occupancy.append(len(active))
         logits_np = np.asarray(logits)
@@ -802,8 +658,7 @@ class ServeEngine:
         if self.telemetry is not None:
             self.telemetry.add(f"decode[b={len(active)}]", "decode",
                                t_begin, self.now, batch=len(active))
-            if self.plan != "jit":
-                self._record_segments(self._planned_decode, t_begin)
+            self._record_segments(acct, t_begin)
         for i in active:
             req = self.slots[i]
             self.lengths[i] += 1
@@ -876,7 +731,8 @@ class ServeEngine:
         self.cache = jax.tree.map(jnp.zeros_like, self.cache)
         self.lengths = np.zeros(self.B, np.int32)
         self.slots = [None] * self.B
-        self.stats = EngineStats(plan=self.plan_label)
+        self.stats = EngineStats(plan=self.plan_label, tp=self.backend.info.tp)
+        self._dev_base = self.backend.device_dispatches
         self.now = 0.0
         if self.cache_mode == "paged":
             self.kv.reset()

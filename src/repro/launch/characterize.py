@@ -18,6 +18,13 @@ the same seeded traffic is served with the block pool driven past
 capacity on each ``--sweep-platforms`` device model (LC/PCIe vs
 CC/NVLink-C2C), printing measured offload traffic and the link-priced
 offload tax per architecture, and writing ``memory_sweep.json``.
+
+``--tp-sweep`` models the tensor-parallel launch story instead: the
+decode kernel stream is traced once per batch, then priced per
+(platform, tp) with per-device dispatch streams (launch tax x tp),
+1/tp device work, and per-layer psum payloads over each platform's
+coupling link — printing how the CPU->GPU-bound inflection batch moves
+with tp on LC vs CC parts, and writing ``tp_sweep.json``.
 """
 from __future__ import annotations
 
@@ -32,7 +39,8 @@ from repro.core.device_model import PLATFORMS
 from repro.core.export import save_merged_trace
 from repro.inference.engine import PLAN_STRATEGIES
 from repro.models import init_params
-from repro.telemetry.characterize import characterize, memory_pressure_sweep
+from repro.telemetry.characterize import (characterize,
+                                          memory_pressure_sweep, tp_sweep)
 from repro.workload import list_scenarios, load_workload, save_workload
 
 
@@ -88,19 +96,55 @@ def main():
                     help="run the paged-KV memory-pressure sweep (LC vs "
                          "CC offload tax) instead of the batch sweep")
     ap.add_argument("--sweep-platforms", default="Intel+H100,GH200",
-                    help="comma-separated device models for --memory-sweep")
+                    help="comma-separated device models for "
+                         "--memory-sweep / --tp-sweep")
     ap.add_argument("--pool-fracs", default="1.0,0.5,0.33",
                     help="pool sizes as fractions of the no-pressure pool")
     ap.add_argument("--block-size", type=int, default=4,
                     help="tokens per KV block for --memory-sweep")
     ap.add_argument("--sweep-max-batch", type=int, default=4)
+    ap.add_argument("--tp-sweep", action="store_true",
+                    help="model the tensor-parallel dispatch/collective "
+                         "sweep (inflection batch vs tp on LC vs CC) "
+                         "instead of the measured batch sweep")
+    ap.add_argument("--tps", default="1,2,4,8",
+                    help="comma-separated tensor-parallel degrees for "
+                         "--tp-sweep")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    params = init_params(jax.random.PRNGKey(0), cfg)
 
+    if args.tp_sweep:
+        # trace-only sweep: abstract weights — full-size archs price
+        # without materializing (or randomly initializing) parameters
+        from repro.launch.steps import params_sds
+        sweep = tp_sweep(
+            cfg, params_sds(cfg),
+            batches=[int(b) for b in args.batches.split(",") if b],
+            tps=[int(t) for t in args.tps.split(",") if t],
+            platforms=[p for p in args.sweep_platforms.split(",") if p],
+            max_len=args.max_len)
+        for r in sweep["points"]:
+            print(f"{r['platform']:<12s} {r['coupling']:<3s} "
+                  f"tp={r['tp']:<2d} batch={r['batch']:<3d} "
+                  f"tklqt={r['modeled_tklqt_us']}us "
+                  f"step={r['modeled_step_us']}us "
+                  f"launch={r['launch_tax_us']}us "
+                  f"coll={r['collective_bytes']}B "
+                  f"coll_tax={r['modeled_collective_tax_us']}us")
+        for plat, by_tp in sweep["inflection_batch"].items():
+            print(f"inflection[{plat}]: " + ", ".join(
+                f"tp={t} -> {b}" for t, b in by_tp.items()))
+        os.makedirs(args.out_dir, exist_ok=True)
+        path = os.path.join(args.out_dir, "tp_sweep.json")
+        with open(path, "w") as f:
+            json.dump(sweep, f, indent=2)
+        print(json.dumps({"summary": sweep, "artifacts": {"sweep": path}}))
+        return
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
     if args.memory_sweep:
         sweep = memory_pressure_sweep(
             cfg, params, scenario=args.scenario,

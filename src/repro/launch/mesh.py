@@ -1,25 +1,42 @@
 """Production mesh construction.
 
 Defined as FUNCTIONS (not module constants) so importing this module never
-touches jax device state.
+touches jax device state.  Every constructor validates the requested axis
+sizes against ``jax.device_count()`` first — an undersized device pool
+fails with an actionable message (how to simulate host devices on CPU)
+instead of the XLA shape error ``jax.make_mesh`` would raise.
 """
 from __future__ import annotations
 
+import math
+
 import jax
+
+from repro.distributed.compat import require_device_count
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    require_device_count(
+        math.prod(shape),
+        what=f"production mesh {dict(zip(axes, shape))}")
     return jax.make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
     """Small mesh over whatever devices exist (tests / local runs)."""
-    if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
-    return jax.make_mesh((data, model), ("data", "model"))
+    for name, size in (("data", data), ("model", model)):
+        if size < 1:
+            raise ValueError(f"mesh axis {name!r} must be >= 1, got {size}")
+    if pod < 0:
+        raise ValueError(f"mesh axis 'pod' must be >= 0, got {pod}")
+    shape = (pod, data, model) if pod else (data, model)
+    axes = ("pod", "data", "model") if pod else ("data", "model")
+    require_device_count(math.prod(shape),
+                         what=f"host mesh {dict(zip(axes, shape))}")
+    return jax.make_mesh(shape, axes)
 
 
 def dp_axes_of(mesh) -> tuple[str, ...]:

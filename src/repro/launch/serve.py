@@ -16,6 +16,13 @@ block-table paged allocator (``--block-size`` tokens per block,
 ``--offload host`` staging evicted blocks in host memory priced by
 ``--platform``'s coupling link; the JSON report then carries block-pool
 utilization, preemption, and offload-traffic counters.
+
+Pick a tensor-parallel degree with ``--tp``: ``--tp N`` serves through
+the sharded backend (params/KV head-sharded over an N-way model mesh,
+shard_map prefill/decode with psum'd partial outputs) and the JSON
+report carries per-device dispatch counts plus collective-payload
+counters priced over ``--platform``'s coupling link.  Needs N visible
+devices — on CPU set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 from __future__ import annotations
 
@@ -47,6 +54,10 @@ def main():
                          "(required with --plan autotuned)")
     ap.add_argument("--platform", default="TPU-v5e",
                     choices=sorted(PLATFORMS))
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: 1 = single-device "
+                         "LocalBackend, N>1 = sharded backend over an "
+                         "N-way model mesh")
     ap.add_argument("--cache", default="contiguous", choices=CACHE_MODES)
     ap.add_argument("--block-size", type=int, default=16,
                     help="tokens per KV block (paged cache)")
@@ -71,6 +82,7 @@ def main():
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
                       max_len=args.max_len, plan=args.plan,
                       platform=args.platform, plan_table=args.plan_table,
+                      tp=args.tp,
                       cache=args.cache, block_size=args.block_size,
                       num_blocks=args.num_blocks, offload=args.offload,
                       prefill_chunk=args.prefill_chunk)
@@ -114,6 +126,15 @@ def main():
         "tokens_out": st.tokens_out,
         "decode_steps": st.decode_steps,
         "decode_dispatches": st.decode_dispatches,
+        "tp": st.tp,
+        "per_device_dispatches": {str(d): n for d, n in
+                                  sorted(st.per_device_dispatches.items())},
+        "collectives": st.collectives,
+        "collective_bytes": st.collective_bytes,
+        "collective_bytes_per_decode_step": round(
+            st.collective_bytes_per_decode_step, 1),
+        "modeled_collective_tax_us": round(
+            st.modeled_collective_tax_s * 1e6, 1),
         "dispatches_per_decode_step": round(
             st.dispatches_per_decode_step, 2),
         "fused_dispatches_per_decode_step": round(

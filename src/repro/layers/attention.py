@@ -199,16 +199,28 @@ def attention_fwd(
     lengths: Optional[jax.Array] = None,    # (B,) per-row lengths (cont. batching)
     shd=None,                               # sharding hook (head-parallel attn)
     block_tables: Optional[jax.Array] = None,  # (B,NB) page ids (paged cache)
+    reduce=None,                            # TP output hook (psum in shard_map)
 ):
     """Returns (out (B,S,d), new_cache|None).
 
     Cross attention: if ``cross_kv`` is given, K/V are (re)computed from it
     (and written into ``cache`` when one is passed — prefill).  If
     ``cross_kv`` is None but ``is_cross``, K/V come from the cache (decode).
+
+    ``reduce``: with wq/wk/wv column-sharded by head and wo row-sharded
+    over a model axis (Megatron layout), the post-``wo`` output is a
+    partial sum per device; ``reduce("attn_out", y)`` psums it inside a
+    shard_map body.  None (single device / GSPMD) is identity.  ``cfg``
+    must then carry the LOCAL head counts (the sharded backend passes a
+    per-device config).
     """
     hq, hkv = cfg.n_heads, cfg.n_kv_heads
     scale = cfg.attn_scale or cfg.hd ** -0.5
     b, s = x.shape[0], x.shape[1]
+
+    def finish(o):
+        y = o.reshape(b, s, hq * cfg.hd) @ params["wo"]
+        return reduce("attn_out", y) if reduce is not None else y
 
     q = _project(params, x, cfg, "q", hq)
     new_cache = None
@@ -239,8 +251,7 @@ def attention_fwd(
             out, new_cache = _paged_attention_fwd(
                 q, k, v, cache, block_tables, positions, lengths,
                 cache_index, cfg, causal=causal, window=window, scale=scale)
-            out = out.reshape(b, s, hq * cfg.hd) @ params["wo"]
-            return out, new_cache
+            return finish(out), new_cache
         if shd is not None:
             if s == 1 and cache is not None:
                 # decode: the q row is tiny — replicate it over tp and keep
@@ -269,8 +280,7 @@ def attention_fwd(
                                      window=window, cap=cfg.attn_softcap,
                                      q_positions=positions,
                                      kv_positions=kv_pos, kv_valid=kv_valid)
-                out = out.reshape(b, s, hq * cfg.hd) @ params["wo"]
-                return out, new_cache
+                return finish(out), new_cache
             # append k/v at cache_index, attend over the full cache
             ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_index, 1)
             cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_index, 1)
@@ -291,8 +301,7 @@ def attention_fwd(
         # keep the whole decode attention replicated-q / sharded-KV; only
         # the tiny (B,1,D) activation reshards before the wo matmul
         out = shd("q_decode", out)
-    out = out.reshape(b, s, hq * cfg.hd) @ params["wo"]
-    return out, new_cache
+    return finish(out), new_cache
 
 
 def make_self_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):

@@ -73,13 +73,19 @@ def activation(x, act: str):
     raise ValueError(act)
 
 
-def mlp_fwd(params, x, cfg: ModelConfig):
+def mlp_fwd(params, x, cfg: ModelConfig, reduce=None):
+    """Gated/plain MLP.  ``reduce`` is the tensor-parallel output hook:
+    with ``w_in``/``w_gate`` column-sharded and ``w_out`` row-sharded over
+    a model axis (Megatron layout), ``h @ w_out`` is a partial sum per
+    device and ``reduce("mlp_out", y)`` psums it inside shard_map; None
+    (single device / GSPMD paths) is identity."""
     h = x @ params["w_in"]
     if cfg.glu:
         h = activation(x @ params["w_gate"], cfg.act) * h
     else:
         h = activation(h, cfg.act)
-    return h @ params["w_out"]
+    y = h @ params["w_out"]
+    return reduce("mlp_out", y) if reduce is not None else y
 
 
 # --------------------------------------------------------------------- misc

@@ -152,7 +152,8 @@ def make_paged_cache(cfg: ModelConfig, num_pages: int, block_size: int,
 # =========================================================== forward
 def _apply_slot(bp, x, cfg: ModelConfig, kind: str, slot: int, *,
                 positions, causal, cache, cache_index, encoder_out,
-                dist, shd, aux, lengths=None, block_tables=None):
+                dist, shd, aux, lengths=None, block_tables=None,
+                reduce=None):
     h = rmsnorm(x, bp["norm1"]["scale"], cfg.norm_eps)
     new_cache = dict(cache) if cache is not None else None
 
@@ -164,7 +165,7 @@ def _apply_slot(bp, x, cfg: ModelConfig, kind: str, slot: int, *,
             cache=None if cache is None else cache.get("self"),
             cache_index=cache_index, lengths=lengths,
             block_tables=block_tables,
-            shd=None if shd is _id_shard else shd)
+            shd=None if shd is _id_shard else shd, reduce=reduce)
         if nc is not None:
             new_cache["self"] = nc
     elif kind == "xattn":
@@ -215,7 +216,7 @@ def _apply_slot(bp, x, cfg: ModelConfig, kind: str, slot: int, *,
         o = checkpoint_name(o, "block_out")
         aux = aux + a
     else:
-        o = mlp_fwd(bp["mlp"], h, cfg)
+        o = mlp_fwd(bp["mlp"], h, cfg, reduce=reduce)
     x = x + shd("resid", o)
     return x, new_cache, aux
 
@@ -234,7 +235,7 @@ REMAT_POLICIES = {
 def _run_stack(blocks, x, cfg: ModelConfig, pattern, *, positions, causal,
                cache, cache_index, encoder_out, dist, shd, remat: bool,
                remat_policy: str = "nothing", unroll: bool = False,
-               lengths=None, block_tables=None):
+               lengths=None, block_tables=None, reduce=None):
     def body(carry, xs):
         x, aux = carry
         bp, cache_sb = xs
@@ -246,7 +247,7 @@ def _run_stack(blocks, x, cfg: ModelConfig, pattern, *, positions, causal,
                 cache=None if cache_sb is None else cache_sb[sl],
                 cache_index=cache_index, encoder_out=encoder_out,
                 dist=dist, shd=shd, aux=aux, lengths=lengths,
-                block_tables=block_tables)
+                block_tables=block_tables, reduce=reduce)
             new_cache_sb[sl] = nc if nc is not None else {}
         return (shd("resid", x), aux), new_cache_sb
 
@@ -291,14 +292,19 @@ def forward(params, tokens, cfg: ModelConfig, *,
             return_hidden: bool = False,
             unroll: bool = False,
             lengths: Optional[jax.Array] = None,
-            block_tables: Optional[jax.Array] = None):
+            block_tables: Optional[jax.Array] = None,
+            reduce=None):
     """Returns (logits_f32, aux, new_cache) — or final hidden states instead
     of logits when return_hidden (chunked-loss path skips the unembed).
     unroll=True runs the layer stack as a python loop (SKIP profiling).
     lengths: (B,) per-row positions for continuous-batching decode.
     block_tables: (B,NB) page ids when ``cache`` is paged (make_paged_cache);
     shared by every layer — the table redirects where pages live, and the
-    same block layout is used across the stack."""
+    same block layout is used across the stack.
+    reduce: tensor-parallel output hook ``(name, x) -> x`` applied to the
+    partial-sum attention/MLP outputs — psum inside a shard_map body when
+    params are Megatron-sharded over a model axis (cfg then carries LOCAL
+    head counts); None everywhere else."""
     b, s = tokens.shape
     if cache_index is None:
         cache_index = jnp.zeros((), jnp.int32)
@@ -333,7 +339,8 @@ def forward(params, tokens, cfg: ModelConfig, *,
         positions=positions, causal=causal, cache=cache,
         cache_index=cache_index, encoder_out=encoder_out,
         dist=dist, shd=shd, remat=remat, remat_policy=remat_policy,
-        unroll=unroll, lengths=lengths, block_tables=block_tables)
+        unroll=unroll, lengths=lengths, block_tables=block_tables,
+        reduce=reduce)
     x = rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
     if return_hidden:
         return x, aux, (new_cache if cache is not None else None)

@@ -10,8 +10,9 @@ from repro.telemetry.metrics import (  # noqa: F401
 )
 from repro.telemetry.spans import Span, SpanRecorder  # noqa: F401
 
-_LAZY = ("CharacterizationResult", "MeasuredPoint", "characterize",
-         "classify_measured_sweep", "run_point")
+_LAZY = ("CharacterizationResult", "MeasuredPoint", "TPSweepPoint",
+         "characterize", "classify_measured_sweep", "memory_pressure_sweep",
+         "run_point", "tp_sweep")
 
 
 def __getattr__(name):

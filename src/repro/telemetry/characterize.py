@@ -328,3 +328,144 @@ def memory_pressure_sweep(cfg, params, *, scenario: str = "chatbot",
         "platforms": list(platforms), "pool_fracs": list(pool_fracs),
         "points": [p.row() for p in points],
     }
+
+
+# ------------------------------------------------------------ tp sweep
+@dataclass
+class TPSweepPoint:
+    """One (platform, tp, batch) cell of the tensor-parallel sweep."""
+    platform: str
+    coupling: str                  # LC (PCIe) | CC (C2C)
+    tp: int
+    batch: int
+    n_kernels: int                 # eager stream length (one decode step)
+    per_device_dispatches: int     # launches issued per device stream
+    modeled_tklqt_s: float
+    modeled_step_s: float          # end of the simulated device timeline
+    launch_tax_s: float            # host-side launch time of the step
+    collective_bytes: int          # psum payload per step (all layers)
+    modeled_collective_tax_s: float
+
+    def row(self) -> dict:
+        return {
+            "platform": self.platform, "coupling": self.coupling,
+            "tp": self.tp, "batch": self.batch,
+            "n_kernels": self.n_kernels,
+            "per_device_dispatches": self.per_device_dispatches,
+            "modeled_tklqt_us": round(self.modeled_tklqt_s * 1e6, 1),
+            "modeled_step_us": round(self.modeled_step_s * 1e6, 1),
+            "launch_tax_us": round(self.launch_tax_s * 1e6, 1),
+            "collective_bytes": self.collective_bytes,
+            "modeled_collective_tax_us":
+                round(self.modeled_collective_tax_s * 1e6, 1),
+        }
+
+
+def decode_collective_sites(cfg, batch: int, n_segments: int) -> list:
+    """Per-segment psum payloads of ONE tensor-parallel decode step.
+
+    Every layer reduces its attention output and its MLP output — two
+    (B, 1, d_model) activations, the collectives the sharded backend
+    captures at trace time.  The ``2 * n_layers`` sites are spread
+    uniformly across the segment stream (the layer structure is
+    periodic), so each psum pays its own ring-latency floor in the queue
+    model instead of one smeared aggregate."""
+    n_sites = 2 * cfg.n_layers
+    per_site = batch * cfg.d_model * cfg.cdtype.itemsize
+    coll = [0.0] * n_segments
+    if not n_segments:
+        return coll
+    for s in range(n_sites):
+        # last segment of each uniform span: the reduce closes a layer half
+        idx = min(((s + 1) * n_segments) // n_sites, n_segments) - 1
+        coll[max(idx, 0)] += per_site
+    return coll
+
+
+def tp_sweep(cfg, params, *, batches: Sequence[int] = (1, 2, 4, 8),
+             tps: Sequence[int] = (1, 2, 4, 8),
+             platforms: Sequence[str] = ("Intel+H100", "GH200"),
+             max_len: int = 64) -> dict:
+    """Model how tensor parallelism shifts the CPU->GPU-bound transition.
+
+    The decode kernel stream is traced ONCE per batch (the real eager
+    stream of this model's decode step), then priced per (platform, tp)
+    through the extended queue model: the host issues every launch once
+    per device stream (launch tax x tp — the multi-GPU widening of
+    Chung et al.), each device runs 1/tp of the flops/bytes, and the
+    per-layer psum payloads ride the platform's coupling link
+    (``allreduce_cost_s``).  The per-(platform, tp) TKLQT-vs-batch curve
+    is classified with the same inflection rule as the measured sweep, so
+    the output shows the inflection batch MOVING RIGHT with tp: more
+    devices widen the CPU-bound region — the paper's coupling story at
+    multi-GPU scale.
+
+    Nothing executes — tracing only — so ``params`` may be abstract
+    (``launch.steps.params_sds(cfg)``): full-size models sweep without
+    materializing weights.  On full smollm-360m this moves the LC
+    (Intel+H100) inflection 16 -> 64 -> 256 -> beyond-range as tp goes
+    1 -> 2 -> 4 -> 8.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.device_model import PLATFORMS, allreduce_cost_s
+    from repro.core.metrics import report
+    from repro.core.tracing import trace_fn
+    from repro.models import forward, make_cache
+    from repro.runtime.plan import LaunchPlan
+    from repro.runtime.planner import simulate_plan
+
+    traces = {}
+    for b in batches:
+        cache = make_cache(cfg, b, max_len, src_len=1, dtype=cfg.cdtype)
+        toks = jnp.zeros((b, 1), jnp.int32)
+        lengths = jnp.zeros((b,), jnp.int32)
+
+        def decode_body(params, cache, tokens, lengths):
+            logits, _, cache2 = forward(params, tokens, cfg, cache=cache,
+                                        lengths=lengths, unroll=True)
+            return logits[:, 0], cache2
+
+        traces[b] = trace_fn(decode_body, params, cache, toks, lengths)
+
+    points: list[TPSweepPoint] = []
+    inflection: dict = {}
+    for plat in platforms:
+        spec = PLATFORMS[plat]
+        inflection[plat] = {}
+        for tp in tps:
+            reports = []
+            for b in batches:
+                tr = traces[b]
+                n = len(tr.kernels)
+                plan = LaunchPlan.eager(n)
+                coll = (decode_collective_sites(cfg, b, n)
+                        if tp > 1 else None)
+                # one queue-model walk per cell: the SkipReport is
+                # derived from the same event list the point exposes
+                ev = simulate_plan(tr.kernels, plan, spec, tp=tp,
+                                   collective_bytes=coll)
+                rep = report(ev, spec.name,
+                             spec.launch_overhead_ns * 1e-9)
+                reports.append(rep)
+                coll_b = int(sum(coll)) if coll else 0
+                points.append(TPSweepPoint(
+                    platform=plat, coupling=spec.coupling, tp=tp, batch=b,
+                    n_kernels=n,
+                    per_device_dispatches=n,
+                    modeled_tklqt_s=rep.tklqt,
+                    modeled_step_s=ev[-1].kernel_end if ev else 0.0,
+                    launch_tax_s=sum(e.t_launch for e in ev),
+                    collective_bytes=coll_b,
+                    modeled_collective_tax_s=sum(
+                        allreduce_cost_s(spec, c, tp)
+                        for c in (coll or []) if c)))
+            bound = classify_sweep(batches, reports)
+            inflection[plat][str(tp)] = bound.inflection_batch
+    return {
+        "arch": cfg.name, "max_len": max_len,
+        "batches": list(batches), "tps": list(tps),
+        "platforms": list(platforms),
+        "inflection_batch": inflection,
+        "points": [p.row() for p in points],
+    }

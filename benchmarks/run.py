@@ -37,6 +37,7 @@ BENCHES = [
     ("fused_decode", "benchmarks.bench_fused_decode"),    # fusion rules
     ("paged_decode", "benchmarks.bench_paged_decode"),    # paged KV cache
     ("sharded_decode", "benchmarks.bench_sharded_decode"),  # tensor parallel
+    ("speculative_decode", "benchmarks.bench_speculative_decode"),
 ]
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines.json")

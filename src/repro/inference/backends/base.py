@@ -43,6 +43,11 @@ class CallAccount:
     collectives: int = 0            # collective ops issued (psum count)
     collective_bytes: int = 0       # payload bytes entering collectives
     modeled_collective_tax_s: float = 0.0  # priced over the platform link
+    # --- speculative decoding (SpeculativeBackend; zero everywhere else)
+    proposed: int = 0               # draft tokens offered to this verify
+    accepted: int = 0               # draft tokens that matched target argmax
+    draft_dispatches: int = 0       # launches on the draft's dispatch stream
+    modeled_draft_launch_tax_s: float = 0.0  # draft stream priced per platform
 
 
 @dataclass
@@ -88,6 +93,14 @@ class ExecutionBackend(Protocol):
 
     def paged_decode(self, cache, tokens, lengths, block_tables):
         """One batched paged decode step."""
+        ...
+
+    def verify(self, cache, tokens, lengths):
+        """Batched multi-token verify; tokens (B, k+1), ALL logits back."""
+        ...
+
+    def paged_verify(self, cache, tokens, lengths, block_tables):
+        """Same over the paged cache."""
         ...
 
     # ------------------------------------------------------- accounting

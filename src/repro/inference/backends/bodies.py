@@ -23,6 +23,8 @@ class StepBodies(NamedTuple):
     decode: callable           # batched contiguous decode step
     paged_prefill: callable    # one paged prefill chunk
     paged_decode: callable     # batched paged decode step
+    verify: callable           # batched multi-token verify (ALL logits rows)
+    paged_verify: callable     # same over the paged cache
 
 
 def make_step_bodies(cfg: ModelConfig, reduce=None) -> StepBodies:
@@ -74,5 +76,26 @@ def make_step_bodies(cfg: ModelConfig, reduce=None) -> StepBodies:
                                     unroll=unroll, reduce=reduce)
         return logits[:, 0], cache2
 
+    def verify_body(params, cache, tokens, lengths, unroll=False):
+        # speculative verify: tokens (B, k+1) = last emitted token + k
+        # draft tokens.  Row b writes KV at lengths[b] .. lengths[b]+k and
+        # ALL k+1 logits rows come back so the scheduler can accept the
+        # longest draft prefix matching target argmax — column j is
+        # exactly what a sequential decode step would produce after
+        # emitting tokens[:j+1], which is what makes speculative output
+        # byte-identical to greedy
+        logits, _, cache2 = forward(params, tokens, cfg, cache=cache,
+                                    lengths=lengths, unroll=unroll,
+                                    reduce=reduce)
+        return logits, cache2
+
+    def paged_verify_body(params, cache, tokens, lengths, block_tables,
+                          unroll=False):
+        logits, _, cache2 = forward(params, tokens, cfg, cache=cache,
+                                    lengths=lengths,
+                                    block_tables=block_tables,
+                                    unroll=unroll, reduce=reduce)
+        return logits, cache2
+
     return StepBodies(prefill_body, decode_body, paged_prefill_body,
-                      paged_decode_body)
+                      paged_decode_body, verify_body, paged_verify_body)

@@ -109,6 +109,8 @@ class LocalBackend(AccountingMixin):
         self._decode = jax.jit(bodies.decode)
         self._prefill_paged = jax.jit(bodies.paged_prefill)
         self._decode_paged = jax.jit(bodies.paged_decode)
+        self._verify = jax.jit(bodies.verify)
+        self._verify_paged = jax.jit(bodies.paged_verify)
         # planned modes trace with unroll=True: the unrolled layer stack
         # gives the periodic kernel stream proximity mining feeds on
         self._prefill_body = bodies.prefill
@@ -204,6 +206,23 @@ class LocalBackend(AccountingMixin):
         logits, cache = self._planned_decode(self.params, cache, tokens,
                                              lengths, block_tables)
         self._planned_account(self._planned_decode)
+        return logits, cache
+
+    def verify(self, cache, tokens, lengths):
+        # speculative verify is jit-dispatched in every plan mode: the
+        # launch-plan runtime replays fixed single-token streams, and the
+        # draft/verify launch trade is priced by Planner(draft_launches=)
+        # / telemetry.characterize.spec_sweep instead
+        t0 = time.perf_counter()
+        logits, cache = self._verify(self.params, cache, tokens, lengths)
+        self._jit_account(t0)
+        return logits, cache
+
+    def paged_verify(self, cache, tokens, lengths, block_tables):
+        t0 = time.perf_counter()
+        logits, cache = self._verify_paged(self.params, cache, tokens,
+                                           lengths, block_tables)
+        self._jit_account(t0)
         return logits, cache
 
     # ------------------------------------------------------- accounting

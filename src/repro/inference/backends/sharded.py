@@ -132,6 +132,8 @@ class ShardedBackend(AccountingMixin):
         self._decode_body = bodies.decode
         self._paged_prefill_body = bodies.paged_prefill
         self._paged_decode_body = bodies.paged_decode
+        self._verify_body = bodies.verify
+        self._paged_verify_body = bodies.paged_verify
 
     # ------------------------------------------------------------ caches
     def init_contiguous_cache(self):
@@ -151,7 +153,7 @@ class ShardedBackend(AccountingMixin):
                               shardings_for(pages, specs, self.mesh))
 
     # ------------------------------------------------------------ dispatch
-    def _wrapped(self, key, body, arg_specs):
+    def _wrapped(self, key, body, arg_specs, logits_spec=P(None, None)):
         """jit(shard_map(body)) for one step kind, built lazily once the
         cache spec tree exists (cache structure fixes in_specs)."""
         fn = self._fns.get(key)
@@ -162,7 +164,7 @@ class ShardedBackend(AccountingMixin):
                     "init_contiguous_cache()/init_paged_cache() first")
             in_specs = (self.param_spec_tree, self._cache_spec_tree,
                         *arg_specs)
-            out_specs = (P(None, None), self._cache_spec_tree)
+            out_specs = (logits_spec, self._cache_spec_tree)
             fn = jax.jit(shard_map(
                 body, mesh=self.mesh, in_specs=in_specs,
                 out_specs=out_specs, check_vma=False))
@@ -219,6 +221,23 @@ class ShardedBackend(AccountingMixin):
         fn = self._fns.get(key) or self._wrapped(
             key, self._paged_decode_body,
             (P(None, None), P(None), P(None, None)))
+        return self._call(key, fn, (cache, tokens, lengths, block_tables))
+
+    def verify(self, cache, tokens, lengths):
+        # speculative verify composes with tp: same shard_map body family,
+        # replicated (B, k+1, V) logits out (tiny at decode widths)
+        key = ("verify",)
+        fn = self._fns.get(key) or self._wrapped(
+            key, self._verify_body, (P(None, None), P(None)),
+            logits_spec=P(None, None, None))
+        return self._call(key, fn, (cache, tokens, lengths))
+
+    def paged_verify(self, cache, tokens, lengths, block_tables):
+        key = ("paged_verify",)
+        fn = self._fns.get(key) or self._wrapped(
+            key, self._paged_verify_body,
+            (P(None, None), P(None), P(None, None)),
+            logits_spec=P(None, None, None))
         return self._call(key, fn, (cache, tokens, lengths, block_tables))
 
     # ------------------------------------------------------- accounting

@@ -1,0 +1,161 @@
+"""Speculative execution backend: draft-propose / batched-verify.
+
+Wraps a target backend (``LocalBackend`` or ``ShardedBackend`` — speculation
+composes with tensor parallelism) and adds a small draft model that proposes
+k tokens autoregressively; the target then verifies all k+1 positions in ONE
+batched forward (``verify``/``paged_verify``).  Accept/reject lives in the
+scheduler (``repro.inference.speculative.greedy_accept``); this class owns
+only the device half: the draft's cache/closures and the accounting of its
+extra dispatch stream.
+
+Accounting is the paper tie-in: every draft forward is a host launch that
+buys nothing by itself — it only pays off by shrinking the number of
+sequential target steps.  Draft launches are counted on their own stream
+(``CallAccount.draft_dispatches``) and priced per platform via
+``core.device_model.dispatch_fanout_s`` into
+``modeled_draft_launch_tax_s``, so the LC-vs-CC launch-tax gap (GH200's
+~2-3x costlier per-launch host path, but far wider CPU-bound batch range)
+shows up directly in the engine stats and the ``spec_sweep``.
+
+The draft always runs single-device with a contiguous (B, T) cache — its
+whole point is to be small — while the target keeps whatever cache mode and
+sharding the engine configured.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.device_model import PLATFORMS, dispatch_fanout_s
+from repro.inference.backends.base import BackendInfo, CallAccount
+from repro.models import forward, make_cache
+
+
+class SpeculativeBackend:
+    """Draft-propose / batched-verify wrapper around a target backend."""
+
+    def __init__(self, target, draft_cfg: ModelConfig, draft_params, *,
+                 max_batch: int, max_len: int, platform: str = "TPU-v5e"):
+        self.target = target
+        self.cfg_draft = draft_cfg
+        self.draft_params = draft_params
+        self.B = max_batch
+        self.T = max_len
+        self.platform = platform
+        self.spec = PLATFORMS[platform]
+        self.info = BackendInfo(
+            kind=f"speculative+{target.info.kind}", tp=target.info.tp,
+            devices=target.info.devices)
+        self.last = CallAccount()
+        self._draft_device_dispatches = 0
+
+        cfg = draft_cfg
+
+        def draft_prefill_body(params, cache, tokens, slot, plen):
+            # same zero-then-write slot prefill as bodies.prefill — the
+            # draft cache must not leak a previous occupant either
+            sub = jax.tree.map(
+                lambda c: jnp.zeros_like(
+                    jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1)),
+                cache)
+            logits, _, sub2 = forward(params, tokens, cfg, cache=sub,
+                                      cache_index=jnp.zeros((), jnp.int32))
+            cache2 = jax.tree.map(
+                lambda c, s_: jax.lax.dynamic_update_slice_in_dim(
+                    c, s_.astype(c.dtype), slot, axis=1), cache, sub2)
+            return logits[:, plen - 1], cache2
+
+        def draft_step_body(params, cache, tokens, positions, lengths):
+            # right-aligned multi-token draft step with EXPLICIT per-row
+            # positions: the catch-up after a fully-accepted window feeds
+            # 2 tokens (the draft never saw its own k-th proposal), normal
+            # rounds feed 1; padding columns carry position T (the cache
+            # write drops) and their logits are ignored.  Only the last
+            # column's logits matter — the next proposal.
+            logits, _, cache2 = forward(params, tokens, cfg, cache=cache,
+                                        positions=positions, lengths=lengths)
+            return logits[:, -1], cache2
+
+        self._draft_prefill = jax.jit(draft_prefill_body,
+                                      static_argnames=("plen",))
+        self._draft_step = jax.jit(draft_step_body)
+
+    # ------------------------------------------------------------ draft side
+    def init_draft_cache(self):
+        return make_cache(self.cfg_draft, self.B, self.T, src_len=1,
+                          dtype=self.cfg_draft.cdtype)
+
+    def _charge_draft(self, n_calls: int, host_time: float) -> CallAccount:
+        # the draft is its own dispatch stream on the target's lead device:
+        # launches counted apart from the target stream, priced at one
+        # stream's host cost (dispatch_fanout_s at tp=1)
+        self.last = CallAccount(
+            draft_dispatches=n_calls, host_time_s=host_time,
+            modeled_draft_launch_tax_s=n_calls * dispatch_fanout_s(
+                self.spec, 1))
+        self._draft_device_dispatches += n_calls
+        return self.last
+
+    def draft_prefill(self, draft_cache, tokens, slot: int, plen: int):
+        t0 = time.perf_counter()
+        logits, draft_cache = self._draft_prefill(
+            self.draft_params, draft_cache, tokens, slot, plen)
+        self._charge_draft(1, time.perf_counter() - t0)
+        return logits, draft_cache
+
+    def draft_step(self, draft_cache, tokens, positions, lengths):
+        t0 = time.perf_counter()
+        logits, draft_cache = self._draft_step(
+            self.draft_params, draft_cache, tokens, positions, lengths)
+        self._charge_draft(1, time.perf_counter() - t0)
+        return logits, draft_cache
+
+    # ---------------------------------------------------- delegated protocol
+    def init_contiguous_cache(self):
+        return self.target.init_contiguous_cache()
+
+    def init_paged_cache(self, kv):
+        return self.target.init_paged_cache(kv)
+
+    def _delegate(self, out):
+        self.last = self.target.last
+        return out
+
+    def prefill(self, cache, tokens, slot: int, plen: int):
+        return self._delegate(self.target.prefill(cache, tokens, slot, plen))
+
+    def decode(self, cache, tokens, lengths):
+        return self._delegate(self.target.decode(cache, tokens, lengths))
+
+    def prefill_chunk(self, cache, tokens, bt_row, t0):
+        return self._delegate(
+            self.target.prefill_chunk(cache, tokens, bt_row, t0))
+
+    def paged_decode(self, cache, tokens, lengths, block_tables):
+        return self._delegate(
+            self.target.paged_decode(cache, tokens, lengths, block_tables))
+
+    def verify(self, cache, tokens, lengths):
+        return self._delegate(self.target.verify(cache, tokens, lengths))
+
+    def paged_verify(self, cache, tokens, lengths, block_tables):
+        return self._delegate(
+            self.target.paged_verify(cache, tokens, lengths, block_tables))
+
+    # ------------------------------------------------------- accounting
+    @property
+    def device_dispatches(self) -> dict:
+        # draft launches land on the target's lead device stream
+        merged = dict(self.target.device_dispatches)
+        if self._draft_device_dispatches:
+            lead = self.info.devices[0] if self.info.devices else 0
+            merged[lead] = (merged.get(lead, 0)
+                            + self._draft_device_dispatches)
+        return merged
+
+    @property
+    def planned_decode(self):
+        return self.target.planned_decode

@@ -43,6 +43,10 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.inference.backends import CallAccount, make_backend
+from repro.inference.speculative import (default_draft_config,
+                                         draft_params_from_target,
+                                         is_truncation_of, pick_spec_k,
+                                         validate_draft)
 from repro.telemetry.metrics import RequestTiming
 
 PLAN_STRATEGIES = ("jit", "eager", "whole_graph", "chain", "auto", "fused",
@@ -108,6 +112,13 @@ class EngineStats:
     modeled_offload_tax_s: float = 0.0  # transfers priced over the coupling
                                         # link (core.device_model PCIe/C2C)
     block_pool_utilization: list = field(default_factory=list)  # per step
+    # ---- speculative decoding (speculative=True; zero otherwise)
+    spec_rounds: int = 0           # draft-propose + batched-verify rounds
+    proposed: int = 0              # draft tokens offered to verification
+    accepted: int = 0              # draft tokens accepted AND emitted
+    corrections: int = 0           # target correction tokens emitted
+    draft_dispatches: int = 0      # launches on the draft dispatch stream
+    modeled_draft_launch_tax_s: float = 0.0  # draft stream, platform-priced
     # single source of truth for per-request latency: rid -> RequestTiming
     # (ttft_s/e2e_s/itl_samples_s below are derived views)
     timings: dict = field(default_factory=dict)
@@ -169,6 +180,23 @@ class EngineStats:
                 if self.decode_steps else 0.0)
 
     @property
+    def accept_rate(self) -> float:
+        """Fraction of proposed draft tokens accepted (and emitted)."""
+        return self.accepted / self.proposed if self.proposed else 0.0
+
+    @property
+    def spec_emitted(self) -> int:
+        """Tokens emitted through speculative rounds (accept + correct)."""
+        return self.accepted + self.corrections
+
+    @property
+    def steps_per_emitted_token(self) -> float:
+        """Sequential target steps per token emitted in spec rounds —
+        < 1.0 is the speculation win (plain decode is exactly 1.0)."""
+        return (self.spec_rounds / self.spec_emitted
+                if self.spec_emitted else 0.0)
+
+    @property
     def collective_bytes_per_decode_step(self) -> float:
         """Decode-only psum payload per decode step (prefill psums are
         tracked in ``collective_bytes`` but excluded here, so the figure
@@ -185,7 +213,10 @@ class ServeEngine:
                  backend=None,
                  cache: str = "contiguous", block_size: int = 16,
                  num_blocks: Optional[int] = None, offload: str = "none",
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 speculative: bool = False, draft_config=None,
+                 draft_params=None, spec_k: int = 4,
+                 spec_inflection: Optional[int] = None):
         if plan not in PLAN_STRATEGIES:
             raise ValueError(f"unknown plan {plan!r}; "
                              f"expected one of {PLAN_STRATEGIES}")
@@ -208,6 +239,24 @@ class ServeEngine:
             raise ValueError(
                 "offload= and prefill_chunk= need cache='paged' (the "
                 "contiguous cache has no blocks to evict or chunk over)")
+        if not speculative and (draft_config is not None
+                                or draft_params is not None):
+            raise ValueError(
+                "draft_config=/draft_params= need speculative=True")
+        if speculative:
+            if not greedy:
+                raise ValueError(
+                    "speculative=True requires greedy=True: the accept "
+                    "rule matches draft tokens against target ARGMAX — "
+                    "sampled decoding has no byte-identical reference "
+                    "sequence to preserve")
+            if plan != "jit":
+                raise ValueError(
+                    f"speculative=True executes plan='jit' only (got "
+                    f"{plan!r}): the launch-plan runtime replays fixed "
+                    "single-token streams; model the draft/verify launch "
+                    "trade with telemetry.characterize.spec_sweep or "
+                    "runtime.planner.simulate_plan(draft_launches=...)")
         if plan == "autotuned":
             # measured plan table (runtime.autotune): the strategy the
             # autotuner benchmarked best for this slot count
@@ -249,6 +298,34 @@ class ServeEngine:
         self.backend = backend if backend is not None else make_backend(
             cfg, params, max_batch=max_batch, max_len=max_len, tp=tp,
             plan=plan, platform=platform)
+        self.speculative = bool(speculative)
+        self.spec_k = spec_k
+        self.spec_inflection = spec_inflection
+        if speculative:
+            # wrap whatever target backend was built (local OR sharded —
+            # speculation composes with tensor parallelism) with the
+            # draft-propose / batched-verify layer
+            draft_cfg = (draft_config if draft_config is not None
+                         else default_draft_config(cfg))
+            validate_draft(cfg, draft_cfg, spec_k)
+            if draft_params is None:
+                if not is_truncation_of(draft_cfg, cfg):
+                    raise ValueError(
+                        f"draft config {draft_cfg.name!r} is not a "
+                        f"truncation of {cfg.name!r} (different width/"
+                        "heads/pattern), so its weights cannot be sliced "
+                        "from the target: pass draft_params= explicitly "
+                        "(e.g. repro.models.init_params(key, "
+                        "draft_config))")
+                draft_params = draft_params_from_target(params, draft_cfg)
+            from repro.inference.backends.speculative import \
+                SpeculativeBackend
+            self.backend = SpeculativeBackend(
+                self.backend, draft_cfg, draft_params,
+                max_batch=max_batch, max_len=max_len, platform=platform)
+            self.draft_cfg = draft_cfg
+            self.draft_cache = self.backend.init_draft_cache()
+            self.draft_lengths = np.zeros(max_batch, np.int32)
         # derived, not stored: an injected backend= decides the degree
         self.tp = self.backend.info.tp
         if cache == "paged":
@@ -260,8 +337,9 @@ class ServeEngine:
                                    block_size=block_size, max_len=max_len,
                                    dtype=cfg.cdtype)
             self.cache = self.backend.init_paged_cache(self.kv)
-            self.offload_tier = (HostOffloadTier(platform)
-                                 if offload == "host" else None)
+            self.offload_tier = (
+                HostOffloadTier(platform, tp=self.backend.info.tp)
+                if offload == "host" else None)
         else:
             self.kv = None
             self.offload_tier = None
@@ -325,6 +403,11 @@ class ServeEngine:
         self.stats.collectives += acct.collectives
         self.stats.collective_bytes += acct.collective_bytes
         self.stats.modeled_collective_tax_s += acct.modeled_collective_tax_s
+        self.stats.proposed += acct.proposed
+        self.stats.accepted += acct.accepted
+        self.stats.draft_dispatches += acct.draft_dispatches
+        self.stats.modeled_draft_launch_tax_s += \
+            acct.modeled_draft_launch_tax_s
         self.stats.per_device_dispatches = {
             d: n - self._dev_base.get(d, 0)
             for d, n in self.backend.device_dispatches.items()}
@@ -386,6 +469,8 @@ class ServeEngine:
             req.status = "active"
             self.slots[slot] = req
             self.lengths[slot] = plen
+            if self.speculative:
+                self._draft_prefill_slot(slot, req.prompt)
         if self.telemetry is not None:
             self.telemetry.add(f"prefill[{plen}]", "prefill", t_begin,
                                self.now, rid=req.rid, slot=slot, plen=plen)
@@ -440,6 +525,13 @@ class ServeEngine:
         self._admit_seq += 1
         self.slots[slot] = req
         self.lengths[slot] = entries
+        if self.speculative:
+            # the TARGET KV came back byte-exact from host memory, but the
+            # draft cache was discarded at preemption: rebuild it from the
+            # known token sequence (prompt + emitted minus the pending
+            # last token — exactly ``entries`` tokens)
+            self._draft_prefill_slot(
+                slot, list(req.prompt) + list(req.generated[:-1]))
         return True
 
     def _pick_victim(self, exclude: int) -> Optional[int]:
@@ -531,6 +623,8 @@ class ServeEngine:
         del self._prefill_tasks[slot]
         self.lengths[slot] = len(task.toks)
         if task.replay:
+            if self.speculative:
+                self._draft_prefill_slot(slot, task.toks)
             return          # resumed recompute: KV rebuilt, nothing emitted
         first = self._sample(task.last_logits[0])
         req.generated.append(first)
@@ -545,6 +639,8 @@ class ServeEngine:
             req.status = "done"
             timing.done_s = self.now
             self._release_slot(slot, req)
+        elif self.speculative:
+            self._draft_prefill_slot(slot, task.toks)
 
     def _advance_prefills(self) -> bool:
         """One chunk of every in-flight prefill, interleaved with decode:
@@ -630,13 +726,190 @@ class ServeEngine:
                 self._release_slot(i, req)
         return True
 
+    # ------------------------------------------------------------ speculative
+    def _draft_prefill_slot(self, slot: int, toks_list) -> None:
+        """Build the draft's KV for a slot from the known token sequence
+        (bucketed like target prefill; the body zeroes the slot row)."""
+        plen = len(toks_list)
+        bucket = self._bucket(plen)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = toks_list
+        _, self.draft_cache = self.backend.draft_prefill(
+            self.draft_cache, jnp.asarray(toks), slot, plen)
+        self._absorb(self.backend.last, decode=False)
+        self.draft_lengths[slot] = plen
+
+    def _spec_depth(self) -> int:
+        """Launch-tax-aware k for this round: deep while the measured
+        boundedness says decode is CPU/dispatch-bound at the current
+        batch, shallow near the inflection, 0 (plain decode) past it."""
+        batch = sum(1 for i, s in enumerate(self.slots)
+                    if s is not None and i not in self._prefill_tasks)
+        return pick_spec_k(batch, max_k=self.spec_k,
+                           inflection_batch=self.spec_inflection)
+
+    def _spec_round(self, k: int, paged: bool) -> bool:
+        """One draft-propose / batched-verify round for all decode-ready
+        slots.  The draft proposes k tokens autoregressively (k launches on
+        its own dispatch stream), the target verifies all k+1 positions in
+        ONE batched forward, and the longest draft prefix matching target
+        argmax is emitted plus the target's correction token — so every
+        emitted token is a target argmax from the true prefix and the
+        output stays byte-identical to plain greedy decode."""
+        if paged:
+            active = [i for i, s in enumerate(self.slots)
+                      if s is not None and i not in self._prefill_tasks]
+            # grow every row's table to cover the whole verify window
+            # (L .. L+k); growth may preempt younger rows out of this round
+            stalled = set()
+            for i in active:
+                if self.slots[i] is None:
+                    continue
+                want = min(int(self.lengths[i]) + k + 1, self.T)
+                if not self._ensure_paged_blocks(self.slots[i], want,
+                                                 exclude=i):
+                    stalled.add(i)
+            active = [i for i in active
+                      if self.slots[i] is not None and i not in stalled]
+        else:
+            active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return False
+        t0 = time.perf_counter()
+        # --- draft propose: one width-2 right-aligned catch-up step (the
+        # draft never saw its own k-th proposal after a fully-accepted
+        # window, so it may be one token behind), then k-1 single steps.
+        # Padding columns carry position T: the cache write drops and the
+        # logits column is ignored.
+        cat_toks = np.zeros((self.B, 2), np.int32)
+        cat_pos = np.full((self.B, 2), self.T, np.int32)
+        for i in active:
+            req = self.slots[i]
+            L = int(self.lengths[i])
+            cat_toks[i, 1] = req.generated[-1]
+            cat_pos[i, 1] = L
+            if int(self.draft_lengths[i]) == L - 1:
+                cat_toks[i, 0] = req.generated[-2]
+                cat_pos[i, 0] = L - 1
+        draft = np.zeros((self.B, k), np.int64)
+        logits_d, self.draft_cache = self.backend.draft_step(
+            self.draft_cache, jnp.asarray(cat_toks), jnp.asarray(cat_pos),
+            jnp.asarray(self.draft_lengths))
+        self._absorb(self.backend.last, decode=True)
+        draft[:, 0] = np.argmax(np.asarray(logits_d), axis=-1)
+        for i in active:
+            self.draft_lengths[i] = int(self.lengths[i]) + 1
+        for j in range(1, k):
+            toks_j = np.zeros((self.B, 1), np.int32)
+            pos_j = np.full((self.B, 1), self.T, np.int32)
+            for i in active:
+                toks_j[i, 0] = draft[i, j - 1]
+                pos_j[i, 0] = self.draft_lengths[i]
+            logits_d, self.draft_cache = self.backend.draft_step(
+                self.draft_cache, jnp.asarray(toks_j), jnp.asarray(pos_j),
+                jnp.asarray(self.draft_lengths))
+            self._absorb(self.backend.last, decode=True)
+            draft[:, j] = np.argmax(np.asarray(logits_d), axis=-1)
+            for i in active:
+                self.draft_lengths[i] += 1
+        # --- batched verify: the target scores all k+1 positions at once
+        ver = np.zeros((self.B, k + 1), np.int32)
+        for i in active:
+            ver[i, 0] = self.slots[i].generated[-1]
+            ver[i, 1:] = draft[i]
+        lengths = jnp.asarray(self.lengths)
+        if paged:
+            owners = [self.slots[i].rid if self.slots[i] is not None
+                      and i not in self._prefill_tasks else None
+                      for i in range(self.B)]
+            bt = jnp.asarray(self.kv.block_tables(owners))
+            logits, self.cache = self.backend.paged_verify(
+                self.cache, jnp.asarray(ver), lengths, bt)
+        else:
+            logits, self.cache = self.backend.verify(
+                self.cache, jnp.asarray(ver), lengths)
+        acct = self.backend.last
+        acct.proposed = k * len(active)
+        tgt = np.argmax(np.asarray(logits), axis=-1)    # (B, k+1)
+        dt = time.perf_counter() - t0
+        t_begin = self.now
+        self.now += dt
+        self.stats.step_times_s.append(dt)
+        self.stats.decode_steps += 1
+        self.stats.spec_rounds += 1
+        self.stats.slot_occupancy.append(len(active))
+        if paged:
+            self.stats.block_pool_utilization.append(
+                self.kv.pool.utilization)
+        if self.telemetry is not None:
+            self.telemetry.add(f"spec_verify[b={len(active)},k={k}]",
+                               "decode", t_begin, self.now,
+                               batch=len(active))
+        total_accepted = 0
+        for i in active:
+            req = self.slots[i]
+            L = int(self.lengths[i])
+            n_acc = 0
+            while n_acc < k and int(draft[i, n_acc]) == int(tgt[i, n_acc]):
+                n_acc += 1
+            # emit the accepted prefix + the target's correction token,
+            # respecting the same budget/length stops as plain decode
+            timing = self.timings.get(req.rid)
+            Lcur = L
+            for j in range(n_acc + 1):
+                req.generated.append(int(tgt[i, j]))
+                Lcur += 1
+                self.stats.tokens_out += 1
+                if j < n_acc:
+                    total_accepted += 1
+                else:
+                    self.stats.corrections += 1
+                if timing is not None:
+                    timing.token_times_s.append(self.now)
+                if len(req.generated) >= req.max_new_tokens or \
+                        Lcur >= self.T - 1:
+                    req.done = True
+                    break
+            self.lengths[i] = Lcur
+            # draft rollback is just a length retreat: entries past the
+            # accepted prefix are stale, masked by kv_valid until the next
+            # window overwrites them
+            self.draft_lengths[i] = L + min(n_acc + 1, k)
+            if req.done:
+                req.status = "done"
+                if timing is not None:
+                    timing.done_s = self.now
+                if paged:
+                    self._release_slot(i, req)
+                else:
+                    self.slots[i] = None
+                    self.lengths[i] = 0
+            elif paged:
+                # block-table rollback: free + zero the tail blocks grown
+                # for rejected verify positions
+                freed = self.kv.pool.trim(req.rid, Lcur)
+                if freed:
+                    self.cache = self.kv.zero_pages(self.cache, freed)
+        acct.accepted = total_accepted
+        self._absorb(acct, decode=True)
+        return True
+
     def step(self):
         """One decode step for all active slots."""
         if self.cache_mode == "paged":
             progressed = self._advance_prefills()
-            progressed = self._paged_decode_step() or progressed
+            k = self._spec_depth() if self.speculative else 0
+            if k:
+                progressed = self._spec_round(k, paged=True) or progressed
+            else:
+                progressed = self._paged_decode_step() or progressed
             self._last_step_progressed = progressed
             return
+        if self.speculative:
+            k = self._spec_depth()
+            if k:
+                self._spec_round(k, paged=False)
+                return
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return
@@ -734,6 +1007,9 @@ class ServeEngine:
         self.stats = EngineStats(plan=self.plan_label, tp=self.backend.info.tp)
         self._dev_base = self.backend.device_dispatches
         self.now = 0.0
+        if self.speculative:
+            self.draft_cache = jax.tree.map(jnp.zeros_like, self.draft_cache)
+            self.draft_lengths = np.zeros(self.B, np.int32)
         if self.cache_mode == "paged":
             self.kv.reset()
             self._prefill_tasks = {}

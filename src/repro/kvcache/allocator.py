@@ -84,6 +84,21 @@ class BlockPool:
             return []
         return self.alloc(owner, need - have)
 
+    def trim(self, owner, n_tokens: int) -> list:
+        """Shrink ``owner`` to the blocks covering ``n_tokens`` entries,
+        releasing the tail ids (speculative-decode rollback: blocks grown
+        for a verify window whose draft tokens were rejected).  Returns
+        the freed ids so the cache layer can zero those pages — same
+        copy-on-free discipline as ``free``."""
+        ids = self._owned.get(owner)
+        keep = self.blocks_for(n_tokens)
+        if not ids or len(ids) <= keep:
+            return []
+        freed = ids[keep:]
+        del ids[keep:]
+        self._free = sorted(self._free + freed)
+        return list(freed)
+
     def table_row(self, owner, n_entries: int, sentinel: int) -> np.ndarray:
         """(n_entries,) int32 block-table row, padded with ``sentinel``
         (an out-of-range page id: gathers clamp, scatters drop)."""

@@ -16,10 +16,17 @@ from repro.core.device_model import PLATFORMS, PlatformSpec, offload_cost_s
 class HostOffloadTier:
     """Staging store for evicted KV blocks + transfer-cost accounting."""
 
-    def __init__(self, platform):
+    def __init__(self, platform, tp: int = 1):
         self.spec: PlatformSpec = (platform if isinstance(platform,
                                                           PlatformSpec)
                                    else PLATFORMS[platform])
+        if tp < 1:
+            raise ValueError(f"tp must be >= 1, got {tp}")
+        # under tensor parallelism the KV pages are head-sharded, so each
+        # device stages only its 1/tp slice over its own host link — the
+        # per-device bytes (what each DMA engine actually moves) are what
+        # the link pricing sees, and the shards transfer concurrently
+        self.tp = tp
         self._store: dict = {}       # rid -> (host leaf arrays, n_blocks)
         self.offload_bytes = 0
         self.restore_bytes = 0
@@ -40,7 +47,7 @@ class HostOffloadTier:
         many small copies, exactly where a high-latency LC link hurts
         most.  This is the single pricing site: callers surface the
         returned tax rather than re-deriving it."""
-        nbytes = sum(a.nbytes for a in host_leaves)
+        nbytes = sum(a.nbytes for a in host_leaves) // self.tp
         tax = offload_cost_s(self.spec, nbytes, transfers=max(n_blocks, 1))
         self._store[rid] = (host_leaves, n_blocks)
         self.offload_bytes += nbytes
@@ -52,7 +59,7 @@ class HostOffloadTier:
         """Pop ``rid``'s staged pages for scatter back to device; returns
         (host_leaves, n_blocks, bytes_moved, modeled_transfer_s)."""
         host_leaves, n_blocks = self._store.pop(rid)
-        nbytes = sum(a.nbytes for a in host_leaves)
+        nbytes = sum(a.nbytes for a in host_leaves) // self.tp
         tax = offload_cost_s(self.spec, nbytes, transfers=max(n_blocks, 1))
         self.restore_bytes += nbytes
         self.restores += 1

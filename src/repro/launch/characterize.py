@@ -25,6 +25,14 @@ decode kernel stream is traced once per batch, then priced per
 1/tp device work, and per-layer psum payloads over each platform's
 coupling link — printing how the CPU->GPU-bound inflection batch moves
 with tp on LC vs CC parts, and writing ``tp_sweep.json``.
+
+``--spec-sweep`` runs the speculative-decoding depth sweep: the live
+engine measures acceptance and steps-per-emitted-token per (k, batch),
+then the target/draft decode streams are priced per platform with the
+draft's serialized dispatch stream and the (k+1)x verify work —
+printing the LC-vs-CC winning batch regions (speculation pays where
+decode is dispatch-bound; CC's region is wider) and writing
+``spec_sweep.json``.
 """
 from __future__ import annotations
 
@@ -40,7 +48,8 @@ from repro.core.export import save_merged_trace
 from repro.inference.engine import PLAN_STRATEGIES
 from repro.models import init_params
 from repro.telemetry.characterize import (characterize,
-                                          memory_pressure_sweep, tp_sweep)
+                                          memory_pressure_sweep, spec_sweep,
+                                          tp_sweep)
 from repro.workload import list_scenarios, load_workload, save_workload
 
 
@@ -110,6 +119,16 @@ def main():
     ap.add_argument("--tps", default="1,2,4,8",
                     help="comma-separated tensor-parallel degrees for "
                          "--tp-sweep")
+    ap.add_argument("--spec-sweep", action="store_true",
+                    help="run the speculative-decoding k x batch sweep "
+                         "(measured acceptance + modeled LC-vs-CC draft "
+                         "launch tax) instead of the measured batch sweep")
+    ap.add_argument("--spec-ks", default="0,2,4,8",
+                    help="comma-separated speculation depths for "
+                         "--spec-sweep (0 = plain decode baseline)")
+    ap.add_argument("--model-batches", default="",
+                    help="extra batch sizes to price (not serve) in "
+                         "--spec-sweep, e.g. 16,64,256")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -145,6 +164,40 @@ def main():
         return
 
     params = init_params(jax.random.PRNGKey(0), cfg)
+    if args.spec_sweep:
+        batches = [int(b) for b in args.batches.split(",") if b]
+        mb = [int(b) for b in args.model_batches.split(",") if b]
+        sweep = spec_sweep(
+            cfg, params,
+            ks=[int(k) for k in args.spec_ks.split(",") if k],
+            batches=batches,
+            platforms=[p for p in args.sweep_platforms.split(",") if p],
+            scenario=args.scenario, n_requests=args.requests,
+            seed=args.seed, prompt_cap=args.prompt_cap or None,
+            output_cap=args.output_cap or None, max_len=args.max_len,
+            model_batches=sorted(set(batches) | set(mb)) if mb else None)
+        for r in sweep["measured"]:
+            print(f"measured k={r['k']:<2d} batch={r['batch']:<3d} "
+                  f"accept={r['accept_rate']:<5} "
+                  f"steps/tok={r['steps_per_emitted_token']:<5} "
+                  f"rounds={r['spec_rounds']:<4d} "
+                  f"draft_disp={r['draft_dispatches']}")
+        for r in sweep["modeled"]:
+            print(f"{r['platform']:<12s} {r['coupling']:<3s} "
+                  f"k={r['k']:<2d} batch={r['batch']:<5d} "
+                  f"base/tok={r['modeled_baseline_per_token_us']}us "
+                  f"spec/tok={r['modeled_spec_per_token_us']}us "
+                  f"draft_tax={r['modeled_draft_launch_tax_per_round_us']}"
+                  f"us win={r['win']}")
+        for plat, by_k in sweep["win_batches"].items():
+            print(f"win_batches[{plat}]: " + ", ".join(
+                f"k={k} -> {bs}" for k, bs in by_k.items()))
+        os.makedirs(args.out_dir, exist_ok=True)
+        path = os.path.join(args.out_dir, "spec_sweep.json")
+        with open(path, "w") as f:
+            json.dump(sweep, f, indent=2)
+        print(json.dumps({"summary": sweep, "artifacts": {"sweep": path}}))
+        return
     if args.memory_sweep:
         sweep = memory_pressure_sweep(
             cfg, params, scenario=args.scenario,

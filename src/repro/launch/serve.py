@@ -23,6 +23,15 @@ shard_map prefill/decode with psum'd partial outputs) and the JSON
 report carries per-device dispatch counts plus collective-payload
 counters priced over ``--platform``'s coupling link.  Needs N visible
 devices — on CPU set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
+Turn on speculative decoding with ``--speculative``: a truncated-target
+draft (``--draft-layers`` superblocks, default half) proposes
+``--spec-k`` tokens per round and the target verifies them in one
+batched forward — emitted tokens stay byte-identical to greedy, and the
+JSON report carries accept-rate / steps-per-emitted-token / draft
+dispatch-stream counters priced by ``--platform``.  ``--spec-inflection``
+feeds the measured CPU->GPU-bound inflection batch to the depth policy
+(deep while dispatch-bound, off past the inflection).
 """
 from __future__ import annotations
 
@@ -73,11 +82,52 @@ def main():
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip the warmup pass; measured fields (launch "
                          "tax, TTFT, ITL) then include jit-compile time")
+    ap.add_argument("--speculative", action="store_true",
+                    help="draft-propose / batched-verify decoding "
+                         "(greedy-lossless; needs --plan jit)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per round (>= 1)")
+    ap.add_argument("--spec-inflection", type=int, default=None,
+                    help="measured CPU->GPU-bound inflection batch for "
+                         "the launch-tax-aware depth policy (from "
+                         "launch.characterize); default: always deep")
+    ap.add_argument("--draft-layers", type=int, default=None,
+                    help="superblocks in the truncated-target draft "
+                         "(default: half the target's)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+
+    draft_cfg = None
+    if args.speculative:
+        # actionable CLI validation before any params materialize
+        if args.plan != "jit":
+            ap.error(f"--speculative needs --plan jit, got {args.plan} "
+                     "(the launch-plan runtime replays fixed single-token "
+                     "streams; model the draft/verify trade with "
+                     "launch.characterize --spec-sweep instead)")
+        if args.spec_k < 1:
+            ap.error(f"--spec-k must be >= 1, got {args.spec_k} "
+                     "(drop --speculative to serve without a draft)")
+        from repro.inference.speculative import (default_draft_config,
+                                                 validate_draft)
+        if args.draft_layers is not None:
+            if not 1 <= args.draft_layers <= cfg.n_superblocks:
+                ap.error(f"--draft-layers must be in [1, "
+                         f"{cfg.n_superblocks}] for {cfg.name} "
+                         f"({cfg.n_superblocks} superblocks), got "
+                         f"{args.draft_layers}")
+            draft_cfg = cfg.replace(
+                name=f"{cfg.name}-draft{args.draft_layers}sb",
+                n_layers=args.draft_layers * len(cfg.block_pattern))
+        else:
+            draft_cfg = default_draft_config(cfg)
+        try:
+            validate_draft(cfg, draft_cfg, args.spec_k)
+        except ValueError as e:
+            ap.error(str(e))
     params = init_params(jax.random.PRNGKey(0), cfg)
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
                       max_len=args.max_len, plan=args.plan,
@@ -85,7 +135,10 @@ def main():
                       tp=args.tp,
                       cache=args.cache, block_size=args.block_size,
                       num_blocks=args.num_blocks, offload=args.offload,
-                      prefill_chunk=args.prefill_chunk)
+                      prefill_chunk=args.prefill_chunk,
+                      speculative=args.speculative, draft_config=draft_cfg,
+                      spec_k=args.spec_k,
+                      spec_inflection=args.spec_inflection)
 
     def make_requests():
         rng = np.random.default_rng(0)
@@ -150,6 +203,18 @@ def main():
                     for rid, t in sorted(st.ttft_s.items())},
         "mean_ttft_ms": round(st.mean_ttft_s * 1e3, 3),
         "mean_itl_ms": round(st.mean_itl_s * 1e3, 3),
+        "speculative": args.speculative,
+        "spec_k": args.spec_k if args.speculative else 0,
+        "draft": draft_cfg.name if draft_cfg is not None else None,
+        "spec_rounds": st.spec_rounds,
+        "proposed": st.proposed,
+        "accepted": st.accepted,
+        "corrections": st.corrections,
+        "accept_rate": round(st.accept_rate, 3),
+        "steps_per_emitted_token": round(st.steps_per_emitted_token, 3),
+        "draft_dispatches": st.draft_dispatches,
+        "modeled_draft_launch_tax_us": round(
+            st.modeled_draft_launch_tax_s * 1e6, 1),
     }))
 
 

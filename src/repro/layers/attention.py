@@ -161,7 +161,12 @@ def _paged_attention_fwd(q, k, v, cache, block_tables, positions, lengths,
     b, s = q.shape[0], q.shape[1]
     kp, vp = cache["k_pages"], cache["v_pages"]
     n_pages, bs_blk = kp.shape[0], kp.shape[1]
-    pages = jnp.take_along_axis(block_tables, positions // bs_blk, axis=1)
+    blk = positions // bs_blk
+    nb = block_tables.shape[1]
+    pages = jnp.take_along_axis(block_tables, jnp.minimum(blk, nb - 1), axis=1)
+    # positions past the slot's table (a verify window crossing max_len)
+    # must DROP, not clamp onto the last real page
+    pages = jnp.where(blk < nb, pages, n_pages)
     offs = positions % bs_blk
     kp = kp.at[pages, offs].set(k.astype(kp.dtype), mode="drop")
     vp = vp.at[pages, offs].set(v.astype(vp.dtype), mode="drop")
@@ -172,8 +177,10 @@ def _paged_attention_fwd(q, k, v, cache, block_tables, positions, lengths,
     vg = vp[safe].reshape(b, t, vp.shape[2], vp.shape[3])
     kv_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
     if lengths is not None:
-        # continuous-batching decode: each row just wrote at its length
-        kv_valid = kv_pos <= lengths[:, None]
+        # continuous-batching decode / speculative verify: row b just wrote
+        # S tokens at lengths[b] .. lengths[b]+S-1 (the causal mask over
+        # q_positions orders the in-window tokens)
+        kv_valid = kv_pos < lengths[:, None] + s
     else:
         # (chunked) prefill: tokens [cache_index, cache_index + s) written
         kv_valid = kv_pos < cache_index + s
@@ -265,17 +272,20 @@ def attention_fwd(
                 v = shd("kv_heads", v)
         if cache is not None:
             if lengths is not None:
-                # continuous-batching decode (S == 1): each row writes at its
-                # own length and sees only its own prefix
-                assert s == 1, "per-row lengths only for single-token decode"
-                rows = jnp.arange(b)
-                ck = cache["k"].at[rows, lengths].set(k[:, 0], mode="drop")
-                cv = cache["v"].at[rows, lengths].set(v[:, 0], mode="drop")
+                # continuous-batching decode (S == 1) or speculative verify
+                # (S == k+1): row b writes its S tokens at positions[b]
+                # (lengths[b] + 0..S-1 by default) and sees only its own
+                # prefix; the causal mask over q_positions orders the
+                # in-window tokens.  Out-of-range positions (padding past
+                # max_len) drop the write.
+                rows = jnp.arange(b)[:, None]
+                ck = cache["k"].at[rows, positions].set(k, mode="drop")
+                cv = cache["v"].at[rows, positions].set(v, mode="drop")
                 new_cache = {"k": ck, "v": cv}
                 tmax = ck.shape[1]
                 kv_pos = jnp.broadcast_to(jnp.arange(tmax, dtype=jnp.int32),
                                           (b, tmax))
-                kv_valid = kv_pos <= lengths[:, None]
+                kv_valid = kv_pos <= positions[:, -1:]
                 out = attention_core(q, ck, cv, scale=scale, causal=causal,
                                      window=window, cap=cfg.attn_softcap,
                                      q_positions=positions,

@@ -310,7 +310,8 @@ def forward(params, tokens, cfg: ModelConfig, *,
         cache_index = jnp.zeros((), jnp.int32)
     if positions is None:
         if lengths is not None:
-            positions = lengths[:, None].astype(jnp.int32)
+            positions = (lengths[:, None].astype(jnp.int32)
+                         + jnp.arange(s, dtype=jnp.int32))
         else:
             positions = cache_index + jnp.arange(s, dtype=jnp.int32)
             positions = jnp.broadcast_to(positions[None], (b, s))

@@ -35,8 +35,8 @@ def simulate_plan(kernels: Sequence, plan: LaunchPlan, spec: PlatformSpec, *,
                   batch_scale: float = 1.0,
                   host_scale: Optional[Sequence[float]] = None,
                   tp: int = 1,
-                  collective_bytes: Union[float, Sequence, None] = None
-                  ) -> list[KernelEvent]:
+                  collective_bytes: Union[float, Sequence, None] = None,
+                  draft_launches: int = 0) -> list[KernelEvent]:
     """In-order queue model over plan segments (one launch per segment).
 
     Rule-tagged segments (``plan.rules``) are priced as ONE fused kernel:
@@ -57,9 +57,19 @@ def simulate_plan(kernels: Sequence, plan: LaunchPlan, spec: PlatformSpec, *,
     psum sites (each nonzero entry pays its own ring-latency floor), or
     one scalar total priced as a single aggregate all-reduce after the
     final segment (no per-site latency knowledge).
+
+    ``draft_launches`` prepends that many speculative-draft dispatches to
+    the host timeline: the draft model is its own single-device stream
+    whose kernels are tiny (device time hides behind the queue) but whose
+    LAUNCHES serialize on the host before the batched verify can issue —
+    the launch-tax side of the speculation trade.  Each costs one tp=1
+    ``dispatch_fanout_s`` of host time and no modeled device work.
     """
     if tp < 1:
         raise ValueError(f"tp must be >= 1, got {tp}")
+    if draft_launches < 0:
+        raise ValueError(
+            f"draft_launches must be >= 0, got {draft_launches}")
     n_segs = len(plan.segments)
     if collective_bytes is None:
         coll = [0.0] * n_segs
@@ -77,6 +87,12 @@ def simulate_plan(kernels: Sequence, plan: LaunchPlan, spec: PlatformSpec, *,
     t_host = 0.0
     device_free = 0.0
     events = []
+    draft_cost = dispatch_fanout_s(spec, 1)     # draft runs single-device
+    for di in range(draft_launches):
+        launch_begin = t_host
+        t_host += draft_cost
+        events.append(KernelEvent(f"draft_launch[{di}]", launch_begin,
+                                  t_host, t_host, t_host))
     base_launch = dispatch_fanout_s(spec, tp)   # one launch per device stream
     work_scale = batch_scale / tp
     for si, seg in enumerate(plan.segments):
@@ -135,7 +151,8 @@ class Planner:
                  batch_scale: float = 1.0,
                  host_scale: Optional[Sequence[float]] = None,
                  tp: int = 1,
-                 collective_bytes: Union[float, Sequence, None] = None):
+                 collective_bytes: Union[float, Sequence, None] = None,
+                 draft_launches: int = 0):
         self.trace = trace
         self.spec = (PLATFORMS[platform] if isinstance(platform, str)
                      else platform)
@@ -145,6 +162,9 @@ class Planner:
         # work divides, collective payload rides the coupling link
         self.tp = tp
         self.collective_bytes = collective_bytes
+        # speculative pricing: the draft's dispatches serialize before
+        # the verify stream (see simulate_plan)
+        self.draft_launches = draft_launches
 
     # ------------------------------------------------------------ plans
     def eager(self) -> LaunchPlan:
@@ -196,7 +216,8 @@ class Planner:
         ev = simulate_plan(self.trace.kernels, plan, self.spec,
                            batch_scale=self.batch_scale,
                            host_scale=self.host_scale, tp=self.tp,
-                           collective_bytes=self.collective_bytes)
+                           collective_bytes=self.collective_bytes,
+                           draft_launches=self.draft_launches)
         return report(ev, self.spec.name, self.spec.launch_overhead_ns * 1e-9)
 
     def compare(self, plans: Sequence[LaunchPlan],

@@ -469,3 +469,209 @@ def tp_sweep(cfg, params, *, batches: Sequence[int] = (1, 2, 4, 8),
         "inflection_batch": inflection,
         "points": [p.row() for p in points],
     }
+
+
+# ------------------------------------------------------------ spec sweep
+@dataclass
+class SpecSweepPoint:
+    """One (k, batch) cell of the speculative-decoding sweep (measured)."""
+    k: int
+    batch: int
+    accept_rate: float
+    steps_per_emitted_token: float
+    spec_rounds: int
+    proposed: int
+    accepted: int
+    corrections: int
+    draft_dispatches: int
+    tokens_out: int
+    decode_steps: int
+
+    def row(self) -> dict:
+        return {
+            "k": self.k, "batch": self.batch,
+            "accept_rate": round(self.accept_rate, 3),
+            "steps_per_emitted_token":
+                round(self.steps_per_emitted_token, 3),
+            "spec_rounds": self.spec_rounds,
+            "proposed": self.proposed, "accepted": self.accepted,
+            "corrections": self.corrections,
+            "draft_dispatches": self.draft_dispatches,
+            "tokens_out": self.tokens_out,
+            "decode_steps": self.decode_steps,
+        }
+
+
+def spec_sweep(cfg, params, *, draft_cfg=None, draft_params=None,
+               ks: Sequence[int] = (2, 4, 8),
+               batches: Sequence[int] = (1, 2, 4),
+               platforms: Sequence[str] = ("Intel+H100", "GH200"),
+               scenario: str = "chatbot", n_requests: int = 6,
+               seed: int = 0, prompt_cap: Optional[int] = 16,
+               output_cap: Optional[int] = 12, max_len: int = 128,
+               cache: str = "contiguous", block_size: int = 16,
+               num_blocks=None, warmup: bool = False,
+               model_batches: Optional[Sequence[int]] = None) -> dict:
+    """Sweep speculation depth x batch: measured acceptance, modeled tax.
+
+    The trade speculation makes is the paper's launch-tax axis run in
+    reverse: the draft ADDS k small dispatches per round (pure host-side
+    serialization — its kernels are tiny) to REMOVE sequential target
+    steps (the batched verify scores k+1 positions per launch stream).
+    So it pays off exactly where decode is CPU/dispatch-bound — low
+    batch — and keeps paying on coupled (CC) parts out to larger batches
+    because their higher per-launch host cost makes each SAVED launch
+    worth more while their inflection sits further right.
+
+    Measured side: the live engine serves the same seeded workload at
+    every (k, batch) with a fixed depth (``spec_inflection=None`` pins
+    ``pick_spec_k`` at k); acceptance and steps-per-emitted-token are
+    real properties of the draft/target pair, independent of platform.
+    Modeled side: the target's decode kernel stream is traced per batch
+    (``model_batches`` extends past the measured range so the sweep
+    reaches the compute-bound flip) and priced per platform through
+    ``simulate_plan``: the baseline is one decode step per emitted token
+    per sequence; the speculative round scales the stream by
+    ``batch_scale=k+1`` (verify work) and prepends ``k x
+    n_draft_kernels`` serialized draft dispatches, then divides by the
+    MEASURED emitted-tokens-per-sequence-per-round (a per-sequence
+    property, carried to the extended batches).  A cell "wins" when
+    modeled spec time per token beats the baseline — in the CPU-bound
+    region the (k+1)x verify work is free (kernels stay under the launch
+    cost) so amortizing launches wins; past the inflection the verify
+    pays full compute and speculation loses.  CC parts, with their
+    costlier per-launch host path and further-right inflection, keep a
+    WIDER winning batch range than LC — the opposite-region check."""
+    import jax.numpy as jnp
+
+    from repro.core.device_model import PLATFORMS, dispatch_fanout_s
+    from repro.core.tracing import trace_fn
+    from repro.inference.speculative import (default_draft_config,
+                                             draft_params_from_target)
+    from repro.models import forward, make_cache
+    from repro.runtime.plan import LaunchPlan
+    from repro.runtime.planner import simulate_plan
+
+    if draft_cfg is None:
+        draft_cfg = default_draft_config(cfg)
+    if draft_params is None:
+        draft_params = draft_params_from_target(params, draft_cfg)
+    workload = sample_requests(scenario, n_requests, seed=seed,
+                               vocab_size=cfg.vocab_size,
+                               prompt_cap=prompt_cap, output_cap=output_cap)
+
+    # ---- measured: acceptance + steps/token per (k, batch)
+    points: list[SpecSweepPoint] = []
+    for b in batches:
+        for k in ks:
+            eng = ServeEngine(cfg, params, max_batch=b, max_len=max_len,
+                              cache=cache, block_size=block_size,
+                              num_blocks=num_blocks,
+                              speculative=k > 0, spec_k=max(k, 1),
+                              draft_config=draft_cfg if k > 0 else None,
+                              draft_params=draft_params if k > 0 else None)
+            if warmup:
+                eng.run(_requests(workload))
+                eng.reset()
+            eng.run(_requests(workload))
+            st = eng.stats
+            points.append(SpecSweepPoint(
+                k=k, batch=b, accept_rate=st.accept_rate,
+                steps_per_emitted_token=st.steps_per_emitted_token,
+                spec_rounds=st.spec_rounds, proposed=st.proposed,
+                accepted=st.accepted, corrections=st.corrections,
+                draft_dispatches=st.draft_dispatches,
+                tokens_out=st.tokens_out, decode_steps=st.decode_steps))
+    measured = {(p.k, p.batch): p for p in points}
+
+    # emitted tokens per sequence per round is a per-sequence property of
+    # the draft/target pair (bounded by accept rate), so the value from
+    # the largest measured batch carries to the extended model batches
+    emit_per_seq: dict = {}
+    for k in ks:
+        if k == 0:
+            continue
+        bmax = max(batches)
+        p = measured[(k, bmax)]
+        emitted = p.accepted + p.corrections
+        emit_per_seq[k] = (emitted / (p.spec_rounds * bmax)
+                          if p.spec_rounds else 1.0)
+
+    if model_batches is None:
+        model_batches = sorted(set(batches) | {16, 64, 256})
+
+    # ---- modeled: price the launch trade per platform over the traced
+    # target/draft decode streams
+    def decode_body_for(body_cfg):
+        def decode_body(params_, cache, tokens, lengths):
+            logits, _, cache2 = forward(params_, tokens, body_cfg,
+                                        cache=cache, lengths=lengths,
+                                        unroll=True)
+            return logits[:, 0], cache2
+        return decode_body
+
+    traces = {}
+    for b in model_batches:
+        tcache = make_cache(cfg, b, max_len, src_len=1, dtype=cfg.cdtype)
+        traces[b] = trace_fn(decode_body_for(cfg), params, tcache,
+                             jnp.zeros((b, 1), jnp.int32),
+                             jnp.zeros((b,), jnp.int32))
+    dcache = make_cache(draft_cfg, 1, max_len, src_len=1,
+                        dtype=draft_cfg.cdtype)
+    n_draft_kernels = len(trace_fn(
+        decode_body_for(draft_cfg), draft_params, dcache,
+        jnp.zeros((1, 1), jnp.int32),
+        jnp.zeros((1,), jnp.int32)).kernels)
+
+    modeled = []
+    win_region: dict = {}
+    for plat in platforms:
+        spec = PLATFORMS[plat]
+        win_region[plat] = {}
+        for b in model_batches:
+            tr = traces[b]
+            plan = LaunchPlan.eager(len(tr.kernels))
+            # one decode step emits one token per sequence
+            base_ev = simulate_plan(tr.kernels, plan, spec)
+            base_per_tok = base_ev[-1].kernel_end if base_ev else 0.0
+            for k in ks:
+                if k == 0:
+                    continue
+                meas = measured.get((k, b))
+                ev = simulate_plan(tr.kernels, plan, spec,
+                                   batch_scale=float(k + 1),
+                                   draft_launches=k * n_draft_kernels)
+                round_s = ev[-1].kernel_end if ev else 0.0
+                spec_per_tok = round_s / emit_per_seq[k]
+                tax = k * n_draft_kernels * dispatch_fanout_s(spec, 1)
+                win = bool(spec_per_tok < base_per_tok)
+                modeled.append({
+                    "platform": plat, "coupling": spec.coupling,
+                    "k": k, "batch": b, "measured": meas is not None,
+                    "accept_rate": round(
+                        (meas or measured[(k, max(batches))]).accept_rate,
+                        3),
+                    "emitted_per_seq_per_round":
+                        round(emit_per_seq[k], 3),
+                    "modeled_baseline_per_token_us":
+                        round(base_per_tok * 1e6, 1),
+                    "modeled_spec_per_token_us":
+                        round(spec_per_tok * 1e6, 1),
+                    "modeled_draft_launch_tax_per_round_us":
+                        round(tax * 1e6, 1),
+                    "win": win,
+                })
+                if win:
+                    win_region[plat].setdefault(str(k), []).append(b)
+    return {
+        "arch": cfg.name, "draft": draft_cfg.name,
+        "scenario": workload.scenario, "seed": workload.seed,
+        "n_requests": workload.n, "max_len": max_len, "cache": cache,
+        "ks": list(ks), "batches": list(batches),
+        "model_batches": list(model_batches),
+        "platforms": list(platforms),
+        "n_draft_kernels": n_draft_kernels,
+        "measured": [p.row() for p in points],
+        "modeled": modeled,
+        "win_batches": win_region,
+    }

@@ -1,0 +1,284 @@
+"""Speculative decoding: accept-rule units, launch-tax-aware depth policy,
+greedy byte-equivalence across seeds and cache modes (including an
+adversarial always-rejecting draft), paged block-table rollback,
+preempt->resume interaction, counter invariants, and validation errors.
+
+The greedy contract under test: every token the speculative engine emits
+is an argmax the TARGET computed from the true prefix, so the output
+stream is byte-identical to plain greedy decoding regardless of draft
+quality — the draft can only change HOW MANY launches it took."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.inference.engine import Request, ServeEngine
+from repro.inference.speculative import (accept_lengths, default_draft_config,
+                                         draft_params_from_target,
+                                         greedy_accept, is_truncation_of,
+                                         pick_spec_k, validate_draft)
+from repro.kvcache.allocator import BlockPool
+from repro.models import init_params
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced(get_config("smollm-360m"), n_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def reject_draft(tiny):
+    """Adversarial draft: truncated-target params with an UNTIED, shifted
+    unembed — it proposes ~x+1 wherever the (tied-embedding) target copies
+    x, so verify rejects at position 0 nearly every round.  Maximal
+    pressure on the correction + rollback paths."""
+    cfg, params = tiny
+    dcfg = default_draft_config(cfg).replace(tie_embeddings=False)
+    dparams = dict(draft_params_from_target(params, dcfg))
+    dparams["lm_head"] = jnp.roll(params["embed"], 1, axis=0).T
+    return dcfg, dparams
+
+
+def _requests(cfg, n=3, new=10, seed=7):
+    rng = np.random.default_rng(seed)
+    return [Request(i, prompt=list(rng.integers(1, cfg.vocab_size, 5 + i)),
+                    max_new_tokens=new) for i in range(n)]
+
+
+def _toks(eng, cfg, **kw):
+    done = eng.run(_requests(cfg, **kw))
+    return {r.rid: list(r.generated) for r in done}
+
+
+# ------------------------------------------------------------ accept rule
+def test_greedy_accept_full_accept():
+    n, emitted = greedy_accept([5, 9, 2], [5, 9, 2, 7])
+    assert n == 3
+    # the whole window plus the target's bonus token after it
+    assert emitted == [5, 9, 2, 7]
+
+
+def test_greedy_accept_full_reject():
+    n, emitted = greedy_accept([5, 9, 2], [4, 9, 2, 7])
+    assert n == 0
+    # still emits >= 1 token: the target's own correction
+    assert emitted == [4]
+
+
+def test_greedy_accept_mid_window_reject():
+    n, emitted = greedy_accept([5, 9, 2], [5, 9, 8, 7])
+    assert n == 2
+    # accepted prefix, then the target's correction REPLACES the draft's
+    # rejected token — never the draft's
+    assert emitted == [5, 9, 8]
+
+
+def test_greedy_accept_shape_mismatch():
+    with pytest.raises(ValueError, match="k\\+1"):
+        greedy_accept([5, 9], [5, 9])
+
+
+def test_accept_lengths_vectorized():
+    draft = np.array([[5, 9, 2], [5, 9, 2], [1, 2, 3]])
+    tgt = np.array([[5, 9, 2, 7], [5, 8, 2, 7], [0, 2, 3, 4]])
+    assert accept_lengths(draft, tgt).tolist() == [3, 1, 0]
+
+
+# ------------------------------------------------------------ depth policy
+def test_pick_spec_k_deep_when_cpu_bound():
+    # inflection None = dispatch-bound over the whole measured range
+    assert pick_spec_k(1, max_k=8, inflection_batch=None) == 8
+    assert pick_spec_k(4, max_k=8, inflection_batch=16) == 8
+
+
+def test_pick_spec_k_shallow_near_inflection():
+    assert pick_spec_k(12, max_k=8, inflection_batch=16) == 4
+
+
+def test_pick_spec_k_off_when_gpu_bound():
+    assert pick_spec_k(16, max_k=8, inflection_batch=16) == 0
+    assert pick_spec_k(64, max_k=8, inflection_batch=16) == 0
+
+
+def test_pick_spec_k_degenerate():
+    assert pick_spec_k(0, max_k=8) == 0
+    assert pick_spec_k(4, max_k=0) == 0
+
+
+# ------------------------------------------------------------ validation
+def test_validate_draft_errors(tiny):
+    cfg, _ = tiny
+    dcfg = default_draft_config(cfg)
+    with pytest.raises(ValueError, match="spec_k"):
+        validate_draft(cfg, dcfg, 0)
+    with pytest.raises(ValueError, match="vocab"):
+        validate_draft(cfg, dcfg.replace(vocab_size=cfg.vocab_size + 1), 4)
+    with pytest.raises(ValueError, match="not smaller"):
+        validate_draft(cfg, cfg, 4)
+
+
+def test_engine_speculative_requires_jit_and_greedy(tiny):
+    cfg, params = tiny
+    with pytest.raises(ValueError, match="plan='jit'"):
+        ServeEngine(cfg, params, max_batch=2, max_len=32,
+                    speculative=True, plan="eager")
+    with pytest.raises(ValueError, match="greedy"):
+        ServeEngine(cfg, params, max_batch=2, max_len=32,
+                    speculative=True, greedy=False)
+    with pytest.raises(ValueError, match="speculative"):
+        ServeEngine(cfg, params, max_batch=2, max_len=32,
+                    draft_config=default_draft_config(cfg))
+
+
+def test_engine_rejects_non_truncation_draft_without_params(tiny):
+    cfg, params = tiny
+    bad = default_draft_config(cfg).replace(d_model=cfg.d_model * 2,
+                                            head_dim=cfg.hd * 2)
+    with pytest.raises(ValueError, match="draft_params"):
+        ServeEngine(cfg, params, max_batch=2, max_len=32,
+                    speculative=True, draft_config=bad)
+
+
+def test_is_truncation_of(tiny):
+    cfg, _ = tiny
+    assert is_truncation_of(default_draft_config(cfg), cfg)
+    assert not is_truncation_of(cfg.replace(d_model=cfg.d_model * 2), cfg)
+
+
+# ------------------------------------------------ greedy byte-equivalence
+@pytest.mark.parametrize("seed", [0, 1])
+def test_spec_matches_greedy_contiguous(tiny, seed):
+    cfg, params = tiny
+    ref = _toks(ServeEngine(cfg, params, max_batch=4, max_len=64),
+                cfg, seed=seed)
+    eng = ServeEngine(cfg, params, max_batch=4, max_len=64,
+                      speculative=True, spec_k=4)
+    assert _toks(eng, cfg, seed=seed) == ref
+    assert eng.stats.spec_rounds > 0
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_spec_matches_greedy_paged(tiny, seed):
+    cfg, params = tiny
+    ref = _toks(ServeEngine(cfg, params, max_batch=4, max_len=64),
+                cfg, seed=seed)
+    eng = ServeEngine(cfg, params, max_batch=4, max_len=64, cache="paged",
+                      block_size=4, num_blocks=64, speculative=True,
+                      spec_k=4)
+    assert _toks(eng, cfg, seed=seed) == ref
+    assert eng.stats.spec_rounds > 0
+
+
+@pytest.mark.parametrize("cache_kw", [
+    {},
+    dict(cache="paged", block_size=4, num_blocks=64),
+])
+def test_rejecting_draft_still_byte_identical(tiny, reject_draft, cache_kw):
+    """Full-reject pressure: the draft disagrees almost everywhere, so
+    every round exercises the correction path (and, paged, the
+    block-table rollback of the over-grown verify window)."""
+    cfg, params = tiny
+    dcfg, dparams = reject_draft
+    ref = _toks(ServeEngine(cfg, params, max_batch=4, max_len=64), cfg)
+    eng = ServeEngine(cfg, params, max_batch=4, max_len=64,
+                      speculative=True, spec_k=4, draft_config=dcfg,
+                      draft_params=dparams, **cache_kw)
+    assert _toks(eng, cfg) == ref
+    # the adversarial draft must actually have been rejected
+    assert eng.stats.accept_rate < 0.5
+    assert eng.stats.corrections > 0
+
+
+def test_spec_preempt_resume_byte_identical(tiny, reject_draft):
+    """Tight pool + host offload: speculation's over-grown windows force
+    rollback AND interact with evict/restore; tokens must not change."""
+    cfg, params = tiny
+    dcfg, dparams = reject_draft
+    kw = dict(max_batch=4, max_len=64, cache="paged", block_size=4,
+              num_blocks=24, offload="host")
+    ref_eng = ServeEngine(cfg, params, **kw)
+    ref = _toks(ref_eng, cfg, n=4, new=14)
+    eng = ServeEngine(cfg, params, speculative=True, spec_k=4,
+                      draft_config=dcfg, draft_params=dparams, **kw)
+    assert _toks(eng, cfg, n=4, new=14) == ref
+
+
+# -------------------------------------------------------- paged rollback
+def test_block_pool_trim():
+    pool = BlockPool(num_blocks=8, block_size=4)
+    pool.alloc("r", 4)                       # covers 16 tokens
+    freed = pool.trim("r", 6)                # only 2 blocks needed
+    assert freed == [2, 3]
+    assert pool.owned("r") == [0, 1]
+    assert pool.free_blocks == 6
+    assert pool.trim("r", 6) == []           # idempotent
+    assert pool.trim("missing", 1) == []
+
+
+def test_spec_round_trims_rejected_blocks(tiny, reject_draft):
+    """With an always-rejecting draft, each verify window grows the block
+    table past what the single emitted token needs; the rollback must
+    return those blocks, so the spec engine's PEAK pool utilization stays
+    within one verify window of the greedy run's."""
+    cfg, params = tiny
+    dcfg, dparams = reject_draft
+    kw = dict(max_batch=2, max_len=64, cache="paged", block_size=4,
+              num_blocks=32)
+    ref = ServeEngine(cfg, params, **kw)
+    _toks(ref, cfg, n=2)
+    eng = ServeEngine(cfg, params, speculative=True, spec_k=4,
+                      draft_config=dcfg, draft_params=dparams, **kw)
+    _toks(eng, cfg, n=2)
+    assert eng.stats.accept_rate < 0.5
+    # k=4 verify can touch at most ceil((k+1)/block_size)+1 = 3 extra
+    # blocks per row beyond the emitted length; without trim the gap
+    # would instead grow with every rejected round
+    b = kw["max_batch"]
+    slack = (3 * b) / kw["num_blocks"]
+    assert (eng.stats.peak_block_pool_utilization
+            <= ref.stats.peak_block_pool_utilization + slack)
+
+
+# ------------------------------------------------------------ counters
+def test_counter_invariants(tiny):
+    cfg, params = tiny
+    n = 3
+    eng = ServeEngine(cfg, params, max_batch=4, max_len=64,
+                      speculative=True, spec_k=3)
+    _toks(eng, cfg, n=n)
+    st = eng.stats
+    assert 0 < st.accepted <= st.proposed
+    assert st.proposed <= 3 * st.spec_rounds * 4
+    assert st.spec_emitted == st.accepted + st.corrections
+    # each request's first token comes from prefill, the rest from rounds
+    assert st.tokens_out == st.spec_emitted + n
+    assert st.draft_dispatches >= st.spec_rounds          # >= 1 per round
+    assert st.modeled_draft_launch_tax_s > 0
+    assert 0 < st.steps_per_emitted_token < 1
+    assert 0 < st.accept_rate <= 1
+
+
+def test_reset_clears_spec_state(tiny):
+    cfg, params = tiny
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64,
+                      speculative=True, spec_k=3)
+    first = _toks(eng, cfg, n=2)
+    eng.reset()
+    assert eng.stats.spec_rounds == 0
+    assert not eng.draft_lengths.any()
+    assert _toks(eng, cfg, n=2) == first
+
+
+def test_depth_policy_disables_speculation_past_inflection(tiny):
+    """spec_inflection at/below the running batch turns rounds off — the
+    engine falls back to plain decode steps (and still matches greedy)."""
+    cfg, params = tiny
+    ref = _toks(ServeEngine(cfg, params, max_batch=2, max_len=64), cfg, n=2)
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64,
+                      speculative=True, spec_k=4, spec_inflection=1)
+    assert _toks(eng, cfg, n=2) == ref
+    assert eng.stats.spec_rounds == 0
+    assert eng.stats.proposed == 0

@@ -38,6 +38,7 @@ BENCHES = [
     ("paged_decode", "benchmarks.bench_paged_decode"),    # paged KV cache
     ("sharded_decode", "benchmarks.bench_sharded_decode"),  # tensor parallel
     ("speculative_decode", "benchmarks.bench_speculative_decode"),
+    ("observability", "benchmarks.bench_observability"),  # telemetry gate
 ]
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines.json")
@@ -56,14 +57,10 @@ def _json_sanitize(obj):
     """Strict-JSON payloads: inf/nan floats (e.g. a measured_speedup of
     inf from a 0-cost fused run) become their string names instead of the
     invalid bare ``Infinity``/``NaN`` tokens ``json.dump`` would emit.
-    Leaf conversion delegates to ``repro.core.fusion.json_safe`` so both
-    export paths share one representation."""
-    from repro.core.fusion import json_safe
-    if isinstance(obj, dict):
-        return {k: _json_sanitize(v) for k, v in obj.items()}
-    if isinstance(obj, list):
-        return [_json_sanitize(v) for v in obj]
-    return json_safe(obj)
+    Delegates to ``repro.core.fusion.json_sanitize`` so every export path
+    (bench artifacts, serve CLI reports) shares one representation."""
+    from repro.core.fusion import json_sanitize
+    return json_sanitize(obj)
 
 
 def _write_artifact(json_dir: str, name: str, payload: dict) -> None:

@@ -81,6 +81,7 @@ class KernelEvent:
     launch_end: float              # host done issuing the call
     kernel_start: float            # ts_b(k)
     kernel_end: float              # ts_e(k)
+    operator: str = ""             # issuing model operator (provenance tag)
 
     @property
     def t_l(self) -> float:        # Eq. 1
@@ -97,6 +98,37 @@ class KernelEvent:
     @property
     def duration(self) -> float:
         return self.kernel_end - self.kernel_start
+
+
+@dataclass
+class DispatchDecomposition:
+    """Per-kernel launch/queue/exec breakdown of one simulated timeline.
+
+    TKLQT (Eq. 2) stops being one opaque scalar: for every kernel,
+    ``t_l = t_launch + t_queue`` with queue time = max(0, host-issue done
+    − device free), so ``tklqt_s`` below is a *real sum over kernels*
+    that per-operator attribution can slice."""
+    rows: list                     # [(name, operator, launch_s, queue_s, exec_s)]
+    launch_s: float
+    queue_s: float
+    exec_s: float
+
+    @property
+    def tklqt_s(self) -> float:
+        return self.launch_s + self.queue_s
+
+
+def decompose_events(events: Sequence) -> DispatchDecomposition:
+    """Break a KernelEvent timeline into launch/queue/exec components."""
+    rows = []
+    launch = queue = exec_ = 0.0
+    for e in events:
+        rows.append((e.name, getattr(e, "operator", ""),
+                     e.t_launch, e.t_queue, e.duration))
+        launch += e.t_launch
+        queue += e.t_queue
+        exec_ += e.duration
+    return DispatchDecomposition(rows, launch, queue, exec_)
 
 
 def offload_cost_s(platform: PlatformSpec, nbytes: float,
@@ -189,5 +221,6 @@ def simulate(kernels: Sequence, platform: PlatformSpec, *,
         start = max(t_host, device_free)         # queue behind running kernels
         end = start + dur
         device_free = end
-        events.append(KernelEvent(k.name, launch_begin, t_host, start, end))
+        events.append(KernelEvent(k.name, launch_begin, t_host, start, end,
+                                  operator=getattr(k, "operator", "")))
     return events

@@ -11,9 +11,27 @@ from typing import Sequence
 from repro.core.device_model import KernelEvent
 
 
+def _flow_pair(name: str, flow_id: int, host_ts_us: float,
+               device_ts_us: float, host_tid: int, device_tid: int,
+               pid: int = 0) -> list:
+    """Chrome-trace flow arrow: a start (``s``) on the host dispatch slice
+    and a finish (``f``, binding-point ``e`` = enclosing slice) on the
+    device kernel slice, joined by a shared numeric ``id``."""
+    return [
+        {"name": name, "ph": "s", "pid": pid, "tid": host_tid,
+         "ts": host_ts_us, "id": flow_id, "cat": "dispatch_flow"},
+        {"name": name, "ph": "f", "pid": pid, "tid": device_tid,
+         "ts": device_ts_us, "id": flow_id, "cat": "dispatch_flow",
+         "bp": "e"},
+    ]
+
+
 def to_chrome_trace(events: Sequence[KernelEvent], platform: str) -> dict:
     out = []
     for i, e in enumerate(events):
+        args = {"t_l_us": e.t_l * 1e6, "queue_us": e.t_queue * 1e6}
+        if getattr(e, "operator", ""):
+            args["operator"] = e.operator
         out.append({
             "name": e.name, "ph": "X", "pid": 0, "tid": 0,
             "ts": e.launch_begin * 1e6,
@@ -25,8 +43,15 @@ def to_chrome_trace(events: Sequence[KernelEvent], platform: str) -> dict:
             "ts": e.kernel_start * 1e6,
             "dur": max(e.duration * 1e6, 0.01),
             "cat": "kernel",
-            "args": {"t_l_us": e.t_l * 1e6, "queue_us": e.t_queue * 1e6},
+            "args": args,
         })
+        # arrow from this launch call to the kernel it enqueued: the
+        # start event must land INSIDE the host slice, so nudge past
+        # launch_begin by a fraction of the (clamped) slice duration
+        out.extend(_flow_pair(e.name, i,
+                              e.launch_begin * 1e6
+                              + 0.5 * max(e.t_launch * 1e6, 0.01),
+                              e.kernel_start * 1e6, 0, 1))
     return {
         "traceEvents": out,
         "displayTimeUnit": "ms",
@@ -73,15 +98,26 @@ def merged_chrome_trace(spans, platform: str,
     so the modeled device lane lines up under the real host lane.
     """
     out = spans_to_chrome_events(spans)
-    for anchor in device_anchors:
-        for e in device_events:
+    n_ev = len(device_events)
+    for ai, anchor in enumerate(device_anchors):
+        for i, e in enumerate(device_events):
+            args = {"t_l_us": e.t_l * 1e6}
+            if getattr(e, "operator", ""):
+                args["operator"] = e.operator
             out.append({
                 "name": e.name, "ph": "X", "pid": 0, "tid": device_tid,
                 "ts": (anchor + e.kernel_start) * 1e6,
                 "dur": max(e.duration * 1e6, 0.01),
                 "cat": "modeled_kernel",
-                "args": {"t_l_us": e.t_l * 1e6},
+                "args": args,
             })
+            # arrow from the modeled host-issue instant (within the
+            # measured segment-dispatch lane) to the modeled kernel;
+            # ids are unique per (anchor, event) pair
+            out.extend(_flow_pair(e.name, ai * n_ev + i,
+                                  (anchor + e.launch_begin) * 1e6,
+                                  (anchor + e.kernel_start) * 1e6,
+                                  1, device_tid))
     meta = {"platform": platform}
     if metadata:
         meta.update(metadata)

@@ -73,8 +73,33 @@ class Trace:
         return sum(k.flops for k in self.kernels)
 
 
-def _flatten(jaxpr, env_map, eqns_out, depth=0):
-    """Inline nested call-like primitives; collect leaf eqns."""
+def _scope_of(eqn) -> str:
+    """``jax.named_scope`` stack recorded on one eqn at trace time."""
+    si = getattr(eqn, "source_info", None)
+    stack = getattr(si, "name_stack", None)
+    if stack is None:
+        return ""
+    try:
+        return str(stack)
+    except Exception:  # noqa: BLE001 - provenance is best-effort
+        return ""
+
+
+def _join_scope(prefix: str, inner: str) -> str:
+    if prefix and inner:
+        return f"{prefix}/{inner}"
+    return prefix or inner
+
+
+def _flatten(jaxpr, env_map, eqns_out, depth=0, prefixes=None, prefix=""):
+    """Inline nested call-like primitives; collect leaf eqns.
+
+    ``prefixes`` (when given) collects one scope-prefix string per leaf
+    eqn: sub-jaxprs are traced in a fresh name-stack context, so their
+    eqns carry scopes *relative* to the call site — the enclosing call
+    eqn's own stack must be re-prepended to recover absolute provenance
+    (e.g. the gather inside ``jnp.take``'s pjit regains ``embed``).
+    """
     for eqn in jaxpr.eqns:
         sub = _sub_jaxpr(eqn) if eqn.primitive.name in _INLINE_PRIMS else None
         if sub is not None:
@@ -88,7 +113,9 @@ def _flatten(jaxpr, env_map, eqns_out, depth=0):
                 sub_map[iv] = ("var", env_map.get(ov, ov) if not isinstance(
                     ov, jexc.Literal) else ov)
             # recurse with substitution: rewrite inner eqns' vars
-            _flatten_inner(inner, sub_map, env_map, eqns_out)
+            _flatten_inner(inner, sub_map, env_map, eqns_out,
+                           prefixes=prefixes,
+                           prefix=_join_scope(prefix, _scope_of(eqn)))
             for ov_inner, ov_outer in zip(inner.outvars, eqn.outvars):
                 tgt = sub_map.get(ov_inner, ov_inner)
                 env_map[ov_outer] = tgt if not isinstance(
@@ -102,9 +129,12 @@ def _flatten(jaxpr, env_map, eqns_out, depth=0):
                     r = env_map.get(v, v)
                     new_invars.append(r)
             eqns_out.append((eqn, new_invars))
+            if prefixes is not None:
+                prefixes.append(prefix)
 
 
-def _flatten_inner(inner, sub_map, env_map, eqns_out):
+def _flatten_inner(inner, sub_map, env_map, eqns_out, prefixes=None,
+                   prefix=""):
     """Flatten an inlined sub-jaxpr, rewriting through sub_map."""
     for eqn in inner.eqns:
         sub = _sub_jaxpr(eqn) if eqn.primitive.name in _INLINE_PRIMS else None
@@ -116,12 +146,16 @@ def _flatten_inner(inner, sub_map, env_map, eqns_out):
                 sub_map2[cv] = ("const", cval)
             for iv, ov in zip(inner2.invars, eqn.invars):
                 sub_map2[iv] = _resolve(ov, sub_map)
-            _flatten_inner(inner2, sub_map2, env_map, eqns_out)
+            _flatten_inner(inner2, sub_map2, env_map, eqns_out,
+                           prefixes=prefixes,
+                           prefix=_join_scope(prefix, _scope_of(eqn)))
             for ov_inner, ov_outer in zip(inner2.outvars, eqn.outvars):
                 sub_map[ov_outer] = _resolve(ov_inner, sub_map2)
         else:
             new_invars = [_resolve(v, sub_map) for v in eqn.invars]
             eqns_out.append((eqn, new_invars))
+            if prefixes is not None:
+                prefixes.append(prefix)
             for ov in eqn.outvars:
                 sub_map[ov] = ov  # identity
 
@@ -148,17 +182,27 @@ def _is_drop(v) -> bool:
     return type(v).__name__ == "DropVar"
 
 
+def _eqn_operator(eqn, prefix: str = "") -> str:
+    """Provenance tag for one equation: the inlining-time scope prefix
+    joined with the ``jax.named_scope`` stack recorded at trace time
+    (e.g. ``"layer0/slot0/attn"``); ``""`` for eqns issued outside any
+    scope."""
+    return _join_scope(prefix, _scope_of(eqn))
+
+
 def trace_fn(fn: Callable, *example_args) -> Trace:
     """Flatten fn into a leaf-primitive kernel trace with cost estimates."""
     closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*example_args)
     env_map: dict = {}
     flat: list = []
-    _flatten(closed.jaxpr, env_map, flat)
+    prefixes: list = []
+    _flatten(closed.jaxpr, env_map, flat, prefixes=prefixes)
     kernels = []
     for i, (eqn, _) in enumerate(flat):
         fl, bt = eqn_costs(eqn)
         shapes = tuple(getattr(v.aval, "shape", ()) for v in eqn.outvars)
-        kernels.append(Kernel(i, eqn.primitive.name, eqn, fl, bt, shapes))
+        kernels.append(Kernel(i, eqn.primitive.name, eqn, fl, bt, shapes,
+                              operator=_eqn_operator(eqn, prefixes[i])))
     return Trace(jaxpr=closed.jaxpr, consts=list(closed.consts),
                  in_vars=list(closed.jaxpr.invars),
                  out_vars=list(closed.jaxpr.outvars),

@@ -48,6 +48,9 @@ class CallAccount:
     accepted: int = 0               # draft tokens that matched target argmax
     draft_dispatches: int = 0       # launches on the draft's dispatch stream
     modeled_draft_launch_tax_s: float = 0.0  # draft stream priced per platform
+    # --- operator->kernel attribution (planned modes; None/() for jit)
+    segment_ops: tuple = ()         # per-segment {op -> kernel count} maps
+    attribution: object = None      # telemetry AttributionReport for ONE call
 
 
 @dataclass
@@ -126,6 +129,28 @@ class AccountingMixin:
     def _init_accounting(self) -> None:
         self.last = CallAccount()
         self._device_dispatches: dict = {}
+        self._m_calls = None
+        self._m_dispatches = None
+        self._m_host = None
+        self._m_coll_bytes = None
+
+    def bind_metrics(self, registry) -> None:
+        """Publish per-call accounting into a ``MetricsRegistry``; idempotent
+        (families are get-or-create) and cheap per call (counter adds)."""
+        kind = self.info.kind
+        self._m_calls = registry.counter(
+            "backend_calls_total", "backend step calls",
+            labels=("backend",))
+        self._m_dispatches = registry.counter(
+            "backend_dispatches_total",
+            "host launches summed over device streams", labels=("backend",))
+        self._m_host = registry.counter(
+            "backend_host_seconds_total",
+            "measured host dispatch time", labels=("backend",))
+        self._m_coll_bytes = registry.counter(
+            "backend_collective_bytes_total",
+            "payload bytes entering collectives", labels=("backend",))
+        self._m_kind = kind
 
     def _charge(self, acct: CallAccount) -> CallAccount:
         """Record ``acct`` as the last call and fold per-device counts."""
@@ -135,6 +160,13 @@ class AccountingMixin:
             key = self.info.devices[d] if d < len(self.info.devices) else d
             self._device_dispatches[key] = (
                 self._device_dispatches.get(key, 0) + per_dev)
+        if self._m_calls is not None:
+            self._m_calls.inc(backend=self._m_kind)
+            self._m_dispatches.inc(acct.dispatches, backend=self._m_kind)
+            self._m_host.inc(acct.host_time_s, backend=self._m_kind)
+            if acct.collective_bytes:
+                self._m_coll_bytes.inc(acct.collective_bytes,
+                                       backend=self._m_kind)
         return acct
 
     @property

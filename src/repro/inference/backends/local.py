@@ -43,6 +43,8 @@ class _PlannedFn:
         self.modeled_tklqt_s = 0.0      # modeled TKLQT of ONE invocation
         self.modeled_events = []        # simulated device timeline, one call
         self.last_host_times = []       # measured per-segment dispatch, last call
+        self.segment_ops = ()           # per-segment {op -> kernel count}
+        self.attribution = None         # AttributionReport, one invocation
 
     def _build(self, *args):
         from repro.core.tracing import trace_fn
@@ -71,6 +73,13 @@ class _PlannedFn:
         from repro.runtime.plan import segment_label
         self.segment_names = [segment_label(trace.kernels, s)
                               for s in plan.segments]
+        # operator->kernel attribution of ONE call: per-segment op maps
+        # plus the modeled timeline split across issuing operators —
+        # computed once here, constant for every later invocation
+        from repro.telemetry.attribution import attribute_events
+        self.segment_ops = tuple(self.executor.segment_operators())
+        self.attribution = attribute_events(trace.kernels, plan,
+                                            self.modeled_events)
 
     def __call__(self, *args):
         if self.executor is None:
@@ -134,7 +143,9 @@ class LocalBackend(AccountingMixin):
             modeled_tklqt_s=pf.modeled_tklqt_s,
             rule_names=tuple(pf.rule_names),
             segment_names=tuple(pf.segment_names),
-            segment_host_times=tuple(pf.last_host_times)))
+            segment_host_times=tuple(pf.last_host_times),
+            segment_ops=pf.segment_ops,
+            attribution=pf.attribution))
 
     def _jit_account(self, t0: float) -> CallAccount:
         return self._charge(CallAccount(

@@ -51,6 +51,8 @@ class SpeculativeBackend:
             devices=target.info.devices)
         self.last = CallAccount()
         self._draft_device_dispatches = 0
+        self._m_draft_calls = None
+        self._m_draft_host = None
 
         cfg = draft_cfg
 
@@ -88,6 +90,18 @@ class SpeculativeBackend:
         return make_cache(self.cfg_draft, self.B, self.T, src_len=1,
                           dtype=self.cfg_draft.cdtype)
 
+    def bind_metrics(self, registry) -> None:
+        """Target backend publishes its own families; the draft's extra
+        dispatch stream gets its own counters."""
+        if hasattr(self.target, "bind_metrics"):
+            self.target.bind_metrics(registry)
+        self._m_draft_calls = registry.counter(
+            "speculative_draft_dispatches_total",
+            "launches on the draft model's dispatch stream")
+        self._m_draft_host = registry.counter(
+            "speculative_draft_host_seconds_total",
+            "measured host time of draft forwards")
+
     def _charge_draft(self, n_calls: int, host_time: float) -> CallAccount:
         # the draft is its own dispatch stream on the target's lead device:
         # launches counted apart from the target stream, priced at one
@@ -97,6 +111,9 @@ class SpeculativeBackend:
             modeled_draft_launch_tax_s=n_calls * dispatch_fanout_s(
                 self.spec, 1))
         self._draft_device_dispatches += n_calls
+        if self._m_draft_calls is not None:
+            self._m_draft_calls.inc(n_calls)
+            self._m_draft_host.inc(host_time)
         return self.last
 
     def draft_prefill(self, draft_cache, tokens, slot: int, plen: int):

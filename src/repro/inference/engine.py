@@ -48,6 +48,7 @@ from repro.inference.speculative import (default_draft_config,
                                          is_truncation_of, pick_spec_k,
                                          validate_draft)
 from repro.telemetry.metrics import RequestTiming
+from repro.telemetry.registry import MetricsRegistry
 
 PLAN_STRATEGIES = ("jit", "eager", "whole_graph", "chain", "auto", "fused",
                    "autotuned")
@@ -79,49 +80,120 @@ class _PrefillTask:
     last_logits: Optional[jax.Array] = None
 
 
-@dataclass
 class EngineStats:
-    prefills: int = 0
-    decode_steps: int = 0
-    tokens_out: int = 0
-    slot_occupancy: list = field(default_factory=list)
-    plan: str = "jit"
-    prefill_dispatches: int = 0    # host dispatches (launches) in prefills
-    decode_dispatches: int = 0     # host dispatches across all decode steps
-    fused_dispatches: int = 0      # decode dispatches that ran fused kernels
-    rule_hits: dict = field(default_factory=dict)  # rule name -> launches
-    modeled_tklqt_s: float = 0.0   # device-model TKLQT summed over steps
-                                   # (0.0 under plan="jit": nothing modeled)
-    measured_dispatch_s: float = 0.0  # measured host launch tax (all steps)
-    decode_dispatch_time_s: float = 0.0  # measured launch tax, decode only
-    step_times_s: list = field(default_factory=list)  # decode step durations
-    # ---- tensor parallelism (tp=1: one stream, zero collective traffic)
-    tp: int = 1                    # device streams every dispatch fans to
-    per_device_dispatches: dict = field(default_factory=dict)
-    collectives: int = 0           # collective ops issued (psums)
-    collective_bytes: int = 0      # payload bytes entering collectives
-    decode_collective_bytes: int = 0  # decode-step-only share of the above
-    modeled_collective_tax_s: float = 0.0  # priced over the coupling link
-    # ---- paged KV cache (cache="paged"; zero/empty under contiguous)
-    rejected: int = 0              # admit() guard: plen + budget > max_len
-    preemptions: int = 0           # slots evicted under block-pool pressure
-    prefill_chunks: int = 0        # chunked-prefill segments executed
-    offload_bytes: int = 0         # measured KV bytes evicted to host tier
-    restore_bytes: int = 0         # measured KV bytes restored from host
-    offload_transfers: int = 0     # block DMAs (evict + restore directions)
-    modeled_offload_tax_s: float = 0.0  # transfers priced over the coupling
-                                        # link (core.device_model PCIe/C2C)
-    block_pool_utilization: list = field(default_factory=list)  # per step
-    # ---- speculative decoding (speculative=True; zero otherwise)
-    spec_rounds: int = 0           # draft-propose + batched-verify rounds
-    proposed: int = 0              # draft tokens offered to verification
-    accepted: int = 0              # draft tokens accepted AND emitted
-    corrections: int = 0           # target correction tokens emitted
-    draft_dispatches: int = 0      # launches on the draft dispatch stream
-    modeled_draft_launch_tax_s: float = 0.0  # draft stream, platform-priced
-    # single source of truth for per-request latency: rid -> RequestTiming
-    # (ttft_s/e2e_s/itl_samples_s below are derived views)
-    timings: dict = field(default_factory=dict)
+    """Serving counters as a DERIVED VIEW of a ``MetricsRegistry``.
+
+    Every scalar field lives in a registry gauge: attribute reads pull the
+    gauge value (int-typed fields come back as Python ints), assignments
+    and ``+=`` write it.  The engine's counting code is unchanged — but
+    ``registry.snapshot()`` and the Prometheus exporter now see exactly
+    the numbers the engine reports, with no second bookkeeping path to
+    drift.  Per-step series, per-request timings, and other non-scalar
+    state stay plain attributes (series belong in histograms, which the
+    engine feeds separately).
+    """
+
+    # attribute -> (gauge name, python type, help text)
+    _SCALARS = {
+        "prefills": ("engine_prefills", int, "prefill steps executed"),
+        "decode_steps": ("engine_decode_steps", int,
+                         "batched decode steps executed"),
+        "tokens_out": ("engine_tokens_out", int, "tokens emitted"),
+        "prefill_dispatches": ("engine_prefill_dispatches", int,
+                               "host dispatches (launches) in prefills"),
+        "decode_dispatches": ("engine_decode_dispatches", int,
+                              "host dispatches across all decode steps"),
+        "fused_dispatches": ("engine_fused_dispatches", int,
+                             "decode dispatches that ran fused kernels"),
+        "modeled_tklqt_s": ("engine_modeled_tklqt_seconds", float,
+                            "device-model TKLQT summed over steps "
+                            "(0 under plan=jit: nothing modeled)"),
+        "measured_dispatch_s": ("engine_measured_dispatch_seconds", float,
+                                "measured host launch tax, all steps"),
+        "decode_dispatch_time_s": ("engine_decode_dispatch_seconds", float,
+                                   "measured launch tax, decode only"),
+        # ---- tensor parallelism (tp=1: one stream, zero collectives)
+        "collectives": ("engine_collectives", int,
+                        "collective ops issued (psums)"),
+        "collective_bytes": ("engine_collective_bytes", int,
+                             "payload bytes entering collectives"),
+        "decode_collective_bytes": ("engine_decode_collective_bytes", int,
+                                    "decode-step-only collective payload"),
+        "modeled_collective_tax_s": ("engine_modeled_collective_tax_seconds",
+                                     float,
+                                     "collectives priced over the link"),
+        # ---- paged KV cache (cache="paged"; zero under contiguous)
+        "rejected": ("engine_rejected", int,
+                     "admissions refused: plen + budget > max_len"),
+        "preemptions": ("engine_preemptions", int,
+                        "slots evicted under block-pool pressure"),
+        "prefill_chunks": ("engine_prefill_chunks", int,
+                           "chunked-prefill segments executed"),
+        "offload_bytes": ("engine_offload_bytes", int,
+                          "measured KV bytes evicted to the host tier"),
+        "restore_bytes": ("engine_restore_bytes", int,
+                          "measured KV bytes restored from the host tier"),
+        "offload_transfers": ("engine_offload_transfers", int,
+                              "block DMAs (evict + restore directions)"),
+        "modeled_offload_tax_s": ("engine_modeled_offload_tax_seconds",
+                                  float,
+                                  "offload DMAs priced over the coupling "
+                                  "link (core.device_model PCIe/C2C)"),
+        # ---- speculative decoding (speculative=True; zero otherwise)
+        "spec_rounds": ("engine_spec_rounds", int,
+                        "draft-propose + batched-verify rounds"),
+        "proposed": ("engine_spec_proposed", int,
+                     "draft tokens offered to verification"),
+        "accepted": ("engine_spec_accepted", int,
+                     "draft tokens accepted AND emitted"),
+        "corrections": ("engine_spec_corrections", int,
+                        "target correction tokens emitted"),
+        "draft_dispatches": ("engine_draft_dispatches", int,
+                             "launches on the draft dispatch stream"),
+        "modeled_draft_launch_tax_s": (
+            "engine_modeled_draft_launch_tax_seconds", float,
+            "draft stream launches, platform-priced"),
+    }
+
+    def __init__(self, plan: str = "jit", tp: int = 1, registry=None):
+        if registry is None:
+            from repro.telemetry.registry import MetricsRegistry
+            registry = MetricsRegistry()
+        object.__setattr__(self, "registry", registry)
+        gauges = {}
+        for attr, (name, _, help_text) in self._SCALARS.items():
+            g = registry.gauge(name, help_text)
+            g.set(0)                      # fresh stats zero their gauges
+            gauges[attr] = g
+        object.__setattr__(self, "_gauges", gauges)
+        self.plan = plan
+        self.tp = tp                   # device streams every dispatch fans to
+        self.slot_occupancy = []
+        self.rule_hits = {}            # rule name -> launches
+        self.step_times_s = []         # decode step durations
+        self.per_device_dispatches = {}
+        self.block_pool_utilization = []  # per decode step
+        # single source of truth for per-request latency: rid ->
+        # RequestTiming (ttft_s/e2e_s/itl_samples_s below are derived)
+        self.timings = {}
+
+    def __getattr__(self, name):
+        spec = type(self)._SCALARS.get(name)
+        if spec is None:
+            raise AttributeError(
+                f"{type(self).__name__!r} object has no attribute {name!r}")
+        try:
+            gauges = object.__getattribute__(self, "_gauges")
+        except AttributeError:
+            raise AttributeError(name) from None
+        v = gauges[name].value()
+        return int(v) if spec[1] is int else v
+
+    def __setattr__(self, name, value):
+        if name in self._SCALARS:
+            self._gauges[name].set(value)
+        else:
+            object.__setattr__(self, name, value)
 
     @property
     def dispatches_per_decode_step(self) -> float:
@@ -216,7 +288,7 @@ class ServeEngine:
                  prefill_chunk: Optional[int] = None,
                  speculative: bool = False, draft_config=None,
                  draft_params=None, spec_k: int = 4,
-                 spec_inflection: Optional[int] = None):
+                 spec_inflection: Optional[int] = None, monitor=True):
         if plan not in PLAN_STRATEGIES:
             raise ValueError(f"unknown plan {plan!r}; "
                              f"expected one of {PLAN_STRATEGIES}")
@@ -350,16 +422,29 @@ class ServeEngine:
         self._last_step_progressed = True
         self.lengths = np.zeros(max_batch, np.int32)
         self.slots: list[Optional[Request]] = [None] * max_batch
-        self.stats = EngineStats(plan=self.plan_label, tp=self.backend.info.tp)
+        self.registry = MetricsRegistry()
+        self.stats = EngineStats(plan=self.plan_label,
+                                 tp=self.backend.info.tp,
+                                 registry=self.registry)
         self._dev_base = self.backend.device_dispatches  # reset() baseline
         self.greedy = greedy
         self.plan = plan
         self.platform = platform
         self.telemetry = telemetry          # Optional[SpanRecorder]
+        # live boundedness monitor: True -> create one, False/None -> off,
+        # or pass a BoundednessMonitor instance to share across engines
+        if monitor is True:
+            from repro.telemetry.monitor import BoundednessMonitor
+            self.monitor = BoundednessMonitor()
+        elif monitor:
+            self.monitor = monitor
+        else:
+            self.monitor = None
         # virtual serving clock (seconds): advances by measured wall time
         # while the engine works, jumps forward over idle gaps so open-loop
         # arrival schedules don't cost real wall time to honor
         self.now = 0.0
+        self._bind_telemetry()
 
     # ------------------------------------------------------------ internals
     @property
@@ -423,6 +508,63 @@ class ServeEngine:
             self.telemetry.add(name, "dispatch", t, t + h, tid=1)
             t += h
 
+    # ------------------------------------------------------- observability
+    def _bind_telemetry(self) -> None:
+        """Point every instrumented component at ``self.registry`` (fresh
+        after ``reset()``: gauges restart at zero, histograms empty)."""
+        reg = self.registry
+        if hasattr(self.backend, "bind_metrics"):
+            self.backend.bind_metrics(reg)
+        if self.kv is not None:
+            self.kv.pool.bind_metrics(reg)
+        if self.offload_tier is not None:
+            self.offload_tier.bind_metrics(reg)
+        if self.telemetry is not None and hasattr(self.telemetry,
+                                                  "bind_metrics"):
+            self.telemetry.bind_metrics(reg)
+        if self.monitor is not None:
+            self.monitor.bind_metrics(reg)
+        self._h_step = reg.histogram(
+            "engine_step_time_seconds", "decode step wall time")
+        self._h_ttft = reg.histogram(
+            "engine_ttft_seconds",
+            "arrival to first emission, engine clock")
+        self._h_itl = reg.histogram(
+            "engine_itl_seconds", "inter-token latency")
+
+    def _note_step(self, batch: int, dt: float, acct: CallAccount) -> None:
+        """One decode step into the step-time histogram and the live
+        boundedness monitor (measured step time + measured launch tax,
+        plus the step's per-operator attribution when a planned mode
+        carries one)."""
+        if self._h_step is not None:
+            self._h_step.observe(dt)
+        if self.monitor is not None:
+            self.monitor.observe(batch, dt, acct.host_time_s)
+            if acct.attribution is not None:
+                self.monitor.observe_operators(acct.attribution.rows)
+
+    def _note_first_token(self, req: Request) -> RequestTiming:
+        """Record a request's first emission: its RequestTiming plus the
+        TTFT histogram sample."""
+        timing = RequestTiming(req.rid, arrival_s=req.arrival_s,
+                               first_token_s=self.now)
+        timing.token_times_s.append(self.now)
+        self.timings[req.rid] = timing
+        if self._h_ttft is not None:
+            self._h_ttft.observe(max(0.0, self.now - req.arrival_s))
+        return timing
+
+    def _note_token(self, timing) -> None:
+        """Record a non-first emission: token time plus the ITL sample
+        (gap since the request's previous token on the engine clock)."""
+        if timing is None:
+            return
+        if self._h_itl is not None and timing.token_times_s:
+            self._h_itl.observe(
+                max(0.0, self.now - timing.token_times_s[-1]))
+        timing.token_times_s.append(self.now)
+
     # ------------------------------------------------------------ api
     def admit(self, req: Request) -> bool:
         plen = len(req.prompt)
@@ -456,10 +598,7 @@ class ServeEngine:
         req.generated.append(first)
         self.stats.prefills += 1
         self.stats.tokens_out += 1
-        timing = RequestTiming(req.rid, arrival_s=req.arrival_s,
-                               first_token_s=self.now)
-        timing.token_times_s.append(self.now)
-        self.timings[req.rid] = timing
+        timing = self._note_first_token(req)
         if len(req.generated) >= req.max_new_tokens:
             # single-token budget: done at prefill, never occupies a slot
             req.done = True
@@ -630,10 +769,7 @@ class ServeEngine:
         req.generated.append(first)
         self.stats.prefills += 1
         self.stats.tokens_out += 1
-        timing = RequestTiming(req.rid, arrival_s=req.arrival_s,
-                               first_token_s=self.now)
-        timing.token_times_s.append(self.now)
-        self.timings[req.rid] = timing
+        timing = self._note_first_token(req)
         if len(req.generated) >= req.max_new_tokens:
             req.done = True
             req.status = "done"
@@ -704,6 +840,7 @@ class ServeEngine:
         t_begin = self.now
         self.now += dt
         self.stats.step_times_s.append(dt)
+        self._note_step(len(active), dt, acct)
         if self.telemetry is not None:
             self.telemetry.add(f"decode[b={len(active)}]", "decode",
                                t_begin, self.now, batch=len(active))
@@ -715,8 +852,7 @@ class ServeEngine:
             req.generated.append(nxt)
             self.stats.tokens_out += 1
             timing = self.timings.get(req.rid)
-            if timing is not None:
-                timing.token_times_s.append(self.now)
+            self._note_token(timing)
             if len(req.generated) >= req.max_new_tokens or \
                     self.lengths[i] >= self.T - 1:
                 req.done = True
@@ -835,6 +971,7 @@ class ServeEngine:
         t_begin = self.now
         self.now += dt
         self.stats.step_times_s.append(dt)
+        self._note_step(len(active), dt, acct)
         self.stats.decode_steps += 1
         self.stats.spec_rounds += 1
         self.stats.slot_occupancy.append(len(active))
@@ -864,8 +1001,7 @@ class ServeEngine:
                     total_accepted += 1
                 else:
                     self.stats.corrections += 1
-                if timing is not None:
-                    timing.token_times_s.append(self.now)
+                self._note_token(timing)
                 if len(req.generated) >= req.max_new_tokens or \
                         Lcur >= self.T - 1:
                     req.done = True
@@ -928,6 +1064,7 @@ class ServeEngine:
         t_begin = self.now
         self.now += dt
         self.stats.step_times_s.append(dt)
+        self._note_step(len(active), dt, acct)
         if self.telemetry is not None:
             self.telemetry.add(f"decode[b={len(active)}]", "decode",
                                t_begin, self.now, batch=len(active))
@@ -939,8 +1076,7 @@ class ServeEngine:
             req.generated.append(nxt)
             self.stats.tokens_out += 1
             timing = self.timings.get(req.rid)
-            if timing is not None:
-                timing.token_times_s.append(self.now)
+            self._note_token(timing)
             if len(req.generated) >= req.max_new_tokens or \
                     self.lengths[i] >= self.T - 1:
                 req.done = True
@@ -1004,9 +1140,16 @@ class ServeEngine:
         self.cache = jax.tree.map(jnp.zeros_like, self.cache)
         self.lengths = np.zeros(self.B, np.int32)
         self.slots = [None] * self.B
-        self.stats = EngineStats(plan=self.plan_label, tp=self.backend.info.tp)
+        # fresh registry so the measured run's gauges/histograms don't
+        # carry warmup observations; everything instrumented rebinds below
+        self.registry = MetricsRegistry()
+        self.stats = EngineStats(plan=self.plan_label,
+                                 tp=self.backend.info.tp,
+                                 registry=self.registry)
         self._dev_base = self.backend.device_dispatches
         self.now = 0.0
+        if self.monitor is not None:
+            self.monitor.clear()
         if self.speculative:
             self.draft_cache = jax.tree.map(jnp.zeros_like, self.draft_cache)
             self.draft_lengths = np.zeros(self.B, np.int32)
@@ -1019,3 +1162,4 @@ class ServeEngine:
                 self.offload_tier.clear()
         if self.telemetry is not None:
             self.telemetry.clear()
+        self._bind_telemetry()

@@ -25,6 +25,28 @@ class BlockPool:
         self.block_size = block_size
         self._free: list[int] = list(range(num_blocks))
         self._owned: dict = {}            # owner -> [block ids, logical order]
+        self._m_used = None
+        self._m_util = None
+        self._m_allocs = None
+        self._m_frees = None
+
+    def bind_metrics(self, registry) -> None:
+        """Publish pool occupancy into a ``MetricsRegistry``: gauges track
+        the live state, counters the cumulative block churn."""
+        self._m_used = registry.gauge(
+            "kvcache_blocks_used", "KV pages currently owned by sequences")
+        self._m_util = registry.gauge(
+            "kvcache_block_utilization", "used / total KV pages")
+        self._m_allocs = registry.counter(
+            "kvcache_blocks_allocated_total", "KV pages handed out")
+        self._m_frees = registry.counter(
+            "kvcache_blocks_freed_total", "KV pages returned to the pool")
+        self._refresh_gauges()
+
+    def _refresh_gauges(self) -> None:
+        if self._m_used is not None:
+            self._m_used.set(self.used_blocks)
+            self._m_util.set(self.utilization)
 
     # ------------------------------------------------------------ queries
     @property
@@ -64,6 +86,9 @@ class BlockPool:
         ids = self._free[:n]
         del self._free[:n]
         self._owned.setdefault(owner, []).extend(ids)
+        if self._m_allocs is not None and n:
+            self._m_allocs.inc(n)
+        self._refresh_gauges()
         return ids
 
     def free(self, owner) -> list:
@@ -71,6 +96,9 @@ class BlockPool:
         returns the freed ids so the cache layer can zero those pages."""
         ids = self._owned.pop(owner, [])
         self._free = sorted(self._free + list(ids))
+        if self._m_frees is not None and ids:
+            self._m_frees.inc(len(ids))
+        self._refresh_gauges()
         return list(ids)
 
     def ensure(self, owner, n_tokens: int) -> list:
@@ -97,6 +125,9 @@ class BlockPool:
         freed = ids[keep:]
         del ids[keep:]
         self._free = sorted(self._free + freed)
+        if self._m_frees is not None and freed:
+            self._m_frees.inc(len(freed))
+        self._refresh_gauges()
         return list(freed)
 
     def table_row(self, owner, n_entries: int, sentinel: int) -> np.ndarray:

@@ -33,6 +33,29 @@ class HostOffloadTier:
         self.evictions = 0
         self.restores = 0
         self.modeled_tax_s = 0.0     # total transfer time over the link
+        self._m_bytes = None
+        self._m_moves = None
+        self._m_tax = None
+
+    def bind_metrics(self, registry) -> None:
+        """Publish transfer accounting into a ``MetricsRegistry``; the
+        ``direction`` label separates evictions from restores."""
+        self._m_bytes = registry.counter(
+            "kvcache_offload_bytes_total",
+            "per-device bytes moved over the host link",
+            labels=("direction",))
+        self._m_moves = registry.counter(
+            "kvcache_offload_transfers_total",
+            "eviction/restore operations", labels=("direction",))
+        self._m_tax = registry.counter(
+            "kvcache_offload_modeled_tax_seconds_total",
+            "modeled host-link transfer time")
+
+    def _charge(self, direction: str, nbytes: int, tax: float) -> None:
+        if self._m_bytes is not None:
+            self._m_bytes.inc(nbytes, direction=direction)
+            self._m_moves.inc(direction=direction)
+            self._m_tax.inc(tax)
 
     def holds(self, rid) -> bool:
         return rid in self._store
@@ -53,6 +76,7 @@ class HostOffloadTier:
         self.offload_bytes += nbytes
         self.evictions += 1
         self.modeled_tax_s += tax
+        self._charge("evict", nbytes, tax)
         return nbytes, tax
 
     def restore(self, rid) -> tuple:
@@ -64,6 +88,7 @@ class HostOffloadTier:
         self.restore_bytes += nbytes
         self.restores += 1
         self.modeled_tax_s += tax
+        self._charge("restore", nbytes, tax)
         return host_leaves, n_blocks, nbytes, tax
 
     def drop(self, rid) -> None:

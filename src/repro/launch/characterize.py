@@ -129,7 +129,15 @@ def main():
     ap.add_argument("--model-batches", default="",
                     help="extra batch sizes to price (not serve) in "
                          "--spec-sweep, e.g. 16,64,256")
+    ap.add_argument("--attribution-report", action="store_true",
+                    help="print the per-operator launch/queue/%%-of-TKLQT "
+                         "table for each batch point (needs a launch-plan "
+                         "mode, not --plan jit)")
     args = ap.parse_args()
+    if args.attribution_report and args.plan == "jit":
+        ap.error("--attribution-report needs a launch-plan mode (--plan "
+                 "eager/chain/auto/whole_graph/fused): plan=jit has no "
+                 "kernel-level provenance to attribute")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -245,6 +253,23 @@ def main():
     infl = result.boundedness.inflection_batch
     print(f"inflection_batch={infl} "
           f"({'always CPU/dispatch-bound in range' if infl is None else 'GPU/compute-bound from here'})")
+
+    if args.attribution_report:
+        for p in result.points:
+            rep = p.attribution
+            if rep is None:
+                print(f"attribution[batch={p.batch}]: unavailable "
+                      "(no planned decode ran at this point)")
+                continue
+            print(f"attribution[batch={p.batch}] "
+                  f"events={rep.total_events} complete={rep.complete} "
+                  f"tklqt={rep.tklqt_s * 1e6:.1f}us")
+            print(f"  {'operator':<12s} {'launches':>9s} {'launch_us':>10s} "
+                  f"{'queue_us':>9s} {'exec_us':>9s} {'tklqt%':>7s}")
+            for row in rep.as_dicts():
+                print(f"  {row['operator']:<12s} {row['launches']:>9.1f} "
+                      f"{row['launch_us']:>10.2f} {row['queue_us']:>9.2f} "
+                      f"{row['exec_us']:>9.2f} {row['tklqt_pct']:>7.2f}")
 
     paths = write_artifacts(result, args.out_dir)
     print(json.dumps({"summary": result.summary(), "artifacts": paths}))

@@ -43,6 +43,7 @@ import jax
 import numpy as np
 
 from repro.core.device_model import PLATFORMS
+from repro.core.fusion import json_sanitize
 from repro.inference.engine import (CACHE_MODES, OFFLOAD_MODES,
                                     PLAN_STRATEGIES, Request, ServeEngine)
 from repro.configs import get_config, reduced
@@ -94,7 +95,22 @@ def main():
     ap.add_argument("--draft-layers", type=int, default=None,
                     help="superblocks in the truncated-target draft "
                          "(default: half the target's)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the engine's MetricsRegistry here after "
+                         "the measured run: Prometheus text exposition "
+                         "when the path ends in .prom, else a JSON "
+                         "snapshot")
+    ap.add_argument("--attribution", action="store_true",
+                    help="include the per-operator launch/queue/exec "
+                         "attribution of one decode step plus the live "
+                         "boundedness verdict in the report (needs a "
+                         "launch-plan mode, not --plan jit)")
     args = ap.parse_args()
+    if args.attribution and args.plan == "jit":
+        ap.error("--attribution needs a launch-plan mode (--plan eager/"
+                 "chain/auto/whole_graph/fused): plan=jit dispatches one "
+                 "whole-step executable with no kernel-level provenance "
+                 "to attribute")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -157,7 +173,7 @@ def main():
     dt = time.time() - t0
     st = eng.stats
     occ = st.slot_occupancy
-    print(json.dumps({
+    report = {
         "arch": cfg.name,
         "requests": sum(1 for r in done if r.status == "done"),
         "plan": st.plan,
@@ -215,7 +231,31 @@ def main():
         "draft_dispatches": st.draft_dispatches,
         "modeled_draft_launch_tax_us": round(
             st.modeled_draft_launch_tax_s * 1e6, 1),
-    }))
+    }
+    if args.attribution:
+        pd = eng._planned_decode
+        rep = pd.attribution if pd is not None else None
+        report["attribution"] = None if rep is None else {
+            "complete": rep.complete,
+            "total_events": rep.total_events,
+            "accounted_launches": float(rep.accounted_launches),
+            "tklqt_us": round(rep.tklqt_s * 1e6, 3),
+            "rows": rep.as_dicts(),
+        }
+        report["boundedness"] = (eng.monitor.summary()
+                                 if eng.monitor is not None else None)
+    if args.metrics_out:
+        if args.metrics_out.endswith(".prom"):
+            with open(args.metrics_out, "w") as fh:
+                fh.write(eng.registry.to_prometheus())
+        else:
+            with open(args.metrics_out, "w") as fh:
+                json.dump(json_sanitize(eng.registry.snapshot()), fh,
+                          indent=2, allow_nan=False)
+        report["metrics_out"] = args.metrics_out
+    # strict JSON even when a measured field degenerates to inf/nan —
+    # the same json_safe leaf conversion the bench artifacts use
+    print(json.dumps(json_sanitize(report), allow_nan=False))
 
 
 if __name__ == "__main__":

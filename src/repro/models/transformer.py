@@ -150,74 +150,91 @@ def make_paged_cache(cfg: ModelConfig, num_pages: int, block_size: int,
 
 
 # =========================================================== forward
+# jax.named_scope tag per mixer kind: these names land in each traced
+# eqn's source_info.name_stack, which core.tracing copies onto
+# Kernel.operator — the provenance the telemetry attribution layer keys on
+_MIXER_SCOPE = {"attn": "attn", "attn_local": "attn", "xattn": "xattn",
+                "mamba": "mamba", "rwkv6": "rwkv"}
+
+
 def _apply_slot(bp, x, cfg: ModelConfig, kind: str, slot: int, *,
                 positions, causal, cache, cache_index, encoder_out,
                 dist, shd, aux, lengths=None, block_tables=None,
                 reduce=None):
-    h = rmsnorm(x, bp["norm1"]["scale"], cfg.norm_eps)
+    with jax.named_scope("norm1"):
+        h = rmsnorm(x, bp["norm1"]["scale"], cfg.norm_eps)
     new_cache = dict(cache) if cache is not None else None
 
-    if kind in ("attn", "attn_local"):
-        window = cfg.sliding_window if kind == "attn_local" else 0
-        o, nc = attn.attention_fwd(
-            bp["mixer"], h, cfg, positions=positions, causal=causal,
-            window=window,
-            cache=None if cache is None else cache.get("self"),
-            cache_index=cache_index, lengths=lengths,
-            block_tables=block_tables,
-            shd=None if shd is _id_shard else shd, reduce=reduce)
-        if nc is not None:
-            new_cache["self"] = nc
-    elif kind == "xattn":
-        o, nc = attn.attention_fwd(
-            bp["mixer"], h, cfg, positions=positions, is_cross=True,
-            cross_kv=encoder_out,
-            cache=None if cache is None else cache.get("cross"),
-            cache_index=cache_index)
-        if nc is not None:
-            new_cache["cross"] = nc
-        o = o * jnp.tanh(bp["xgate"]).astype(o.dtype)
-    elif kind == "mamba":
-        o, nc = mamba_l.mamba_fwd(
-            bp["mixer"], h, cfg,
-            state=None if cache is None else cache.get("mamba"))
-        if cache is not None:
-            new_cache["mamba"] = nc
-    elif kind == "rwkv6":
-        st = None if cache is None else \
-            {"shift": cache["rwkv"]["shift"], "s": cache["rwkv"]["s"]}
-        o, nst = rwkv_l.rwkv_time_fwd(bp["mixer"], h, cfg, state=st, shd=shd)
-        if cache is not None:
-            new_cache["rwkv"] = dict(cache["rwkv"], **nst)
-    else:
-        raise ValueError(kind)
-    x = x + shd("resid", checkpoint_name(o, "block_out"))
+    with jax.named_scope(_MIXER_SCOPE.get(kind, kind)):
+        if kind in ("attn", "attn_local"):
+            window = cfg.sliding_window if kind == "attn_local" else 0
+            o, nc = attn.attention_fwd(
+                bp["mixer"], h, cfg, positions=positions, causal=causal,
+                window=window,
+                cache=None if cache is None else cache.get("self"),
+                cache_index=cache_index, lengths=lengths,
+                block_tables=block_tables,
+                shd=None if shd is _id_shard else shd, reduce=reduce)
+            if nc is not None:
+                new_cache["self"] = nc
+        elif kind == "xattn":
+            o, nc = attn.attention_fwd(
+                bp["mixer"], h, cfg, positions=positions, is_cross=True,
+                cross_kv=encoder_out,
+                cache=None if cache is None else cache.get("cross"),
+                cache_index=cache_index)
+            if nc is not None:
+                new_cache["cross"] = nc
+            o = o * jnp.tanh(bp["xgate"]).astype(o.dtype)
+        elif kind == "mamba":
+            o, nc = mamba_l.mamba_fwd(
+                bp["mixer"], h, cfg,
+                state=None if cache is None else cache.get("mamba"))
+            if cache is not None:
+                new_cache["mamba"] = nc
+        elif kind == "rwkv6":
+            st = None if cache is None else \
+                {"shift": cache["rwkv"]["shift"], "s": cache["rwkv"]["s"]}
+            o, nst = rwkv_l.rwkv_time_fwd(bp["mixer"], h, cfg, state=st,
+                                          shd=shd)
+            if cache is not None:
+                new_cache["rwkv"] = dict(cache["rwkv"], **nst)
+        else:
+            raise ValueError(kind)
+    with jax.named_scope("resid"):
+        x = x + shd("resid", checkpoint_name(o, "block_out"))
 
     # enc-dec cross attention (seamless decoder)
     if "xattn" in bp and kind != "xattn":
-        h = rmsnorm(x, bp["norm_x"]["scale"], cfg.norm_eps)
-        o, nc = attn.attention_fwd(
-            bp["xattn"], h, cfg, positions=positions, is_cross=True,
-            cross_kv=encoder_out,
-            cache=None if cache is None else cache.get("cross"),
-            cache_index=cache_index)
-        if nc is not None:
-            new_cache["cross"] = nc
-        x = x + shd("resid", o)
+        with jax.named_scope("xattn"):
+            h = rmsnorm(x, bp["norm_x"]["scale"], cfg.norm_eps)
+            o, nc = attn.attention_fwd(
+                bp["xattn"], h, cfg, positions=positions, is_cross=True,
+                cross_kv=encoder_out,
+                cache=None if cache is None else cache.get("cross"),
+                cache_index=cache_index)
+            if nc is not None:
+                new_cache["cross"] = nc
+            x = x + shd("resid", o)
 
-    h = rmsnorm(x, bp["norm2"]["scale"], cfg.norm_eps)
+    with jax.named_scope("norm2"):
+        h = rmsnorm(x, bp["norm2"]["scale"], cfg.norm_eps)
     if kind == "rwkv6":
-        st = None if cache is None else {"shift": cache["rwkv"]["shift_c"]}
-        o, nst = rwkv_l.rwkv_channel_fwd(bp["mlp"], h, cfg, state=st)
-        if cache is not None:
-            new_cache["rwkv"]["shift_c"] = nst["shift"]
+        with jax.named_scope("rwkv_channel"):
+            st = None if cache is None else {"shift": cache["rwkv"]["shift_c"]}
+            o, nst = rwkv_l.rwkv_channel_fwd(bp["mlp"], h, cfg, state=st)
+            if cache is not None:
+                new_cache["rwkv"]["shift_c"] = nst["shift"]
     elif "moe" in bp:
-        o, a = moe_fwd(bp["moe"], h, cfg, dist=dist)
-        o = checkpoint_name(o, "block_out")
-        aux = aux + a
+        with jax.named_scope("moe"):
+            o, a = moe_fwd(bp["moe"], h, cfg, dist=dist)
+            o = checkpoint_name(o, "block_out")
+            aux = aux + a
     else:
-        o = mlp_fwd(bp["mlp"], h, cfg, reduce=reduce)
-    x = x + shd("resid", o)
+        with jax.named_scope("mlp"):
+            o = mlp_fwd(bp["mlp"], h, cfg, reduce=reduce)
+    with jax.named_scope("resid"):
+        x = x + shd("resid", o)
     return x, new_cache, aux
 
 
@@ -242,12 +259,14 @@ def _run_stack(blocks, x, cfg: ModelConfig, pattern, *, positions, causal,
         new_cache_sb = {}
         for i, kind in enumerate(pattern):
             sl = f"slot{i}"
-            x, nc, aux = _apply_slot(
-                bp[sl], x, cfg, kind, i, positions=positions, causal=causal,
-                cache=None if cache_sb is None else cache_sb[sl],
-                cache_index=cache_index, encoder_out=encoder_out,
-                dist=dist, shd=shd, aux=aux, lengths=lengths,
-                block_tables=block_tables, reduce=reduce)
+            with jax.named_scope(sl):
+                x, nc, aux = _apply_slot(
+                    bp[sl], x, cfg, kind, i, positions=positions,
+                    causal=causal,
+                    cache=None if cache_sb is None else cache_sb[sl],
+                    cache_index=cache_index, encoder_out=encoder_out,
+                    dist=dist, shd=shd, aux=aux, lengths=lengths,
+                    block_tables=block_tables, reduce=reduce)
             new_cache_sb[sl] = nc if nc is not None else {}
         return (shd("resid", x), aux), new_cache_sb
 
@@ -268,8 +287,9 @@ def _run_stack(blocks, x, cfg: ModelConfig, pattern, *, positions, causal,
         carry = (x, jnp.zeros((), jnp.float32))
         caches = []
         for i in range(n):
-            xs = jax.tree.map(lambda a: a[i], (blocks, cache))
-            carry, nc = body(carry, xs)
+            with jax.named_scope(f"layer{i}"):
+                xs = jax.tree.map(lambda a: a[i], (blocks, cache))
+                carry, nc = body(carry, xs)
             caches.append(nc)
         new_cache = jax.tree.map(lambda *cs: jnp.stack(cs), *caches) \
             if caches and jax.tree.leaves(caches[0]) else caches[0]
@@ -333,8 +353,9 @@ def forward(params, tokens, cfg: ModelConfig, *,
     elif frontend_embeds is not None:
         encoder_out = frontend_embeds.astype(cfg.cdtype)
 
-    x = embed_tokens(params["embed"], tokens, cfg).astype(cfg.cdtype)
-    x = shd("act", x)
+    with jax.named_scope("embed"):
+        x = embed_tokens(params["embed"], tokens, cfg).astype(cfg.cdtype)
+        x = shd("act", x)
     x, aux, new_cache = _run_stack(
         params["blocks"], x, cfg, cfg.block_pattern,
         positions=positions, causal=causal, cache=cache,
@@ -342,11 +363,13 @@ def forward(params, tokens, cfg: ModelConfig, *,
         dist=dist, shd=shd, remat=remat, remat_policy=remat_policy,
         unroll=unroll, lengths=lengths, block_tables=block_tables,
         reduce=reduce)
-    x = rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    with jax.named_scope("final_norm"):
+        x = rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
     if return_hidden:
         return x, aux, (new_cache if cache is not None else None)
-    logits = unembed(x, params["embed"], params.get("lm_head"), cfg)
-    logits = shd("logits", logits)
+    with jax.named_scope("unembed"):
+        logits = unembed(x, params["embed"], params.get("lm_head"), cfg)
+        logits = shd("logits", logits)
     return logits, aux, (new_cache if cache is not None else None)
 
 

@@ -68,6 +68,16 @@ class PlanExecutor:
         self.plan.validate(len(trace.kernels))
         self.recorder = recorder
         self._compiled = None
+        self._seg_ops = None
+
+    def segment_operators(self) -> list:
+        """Per-segment {canonical op -> member-kernel count} maps (lazily
+        built once per executor; the plan is immutable)."""
+        if self._seg_ops is None:
+            from repro.telemetry.attribution import segment_ops
+            self._seg_ops = [segment_ops(self.trace.kernels, seg)
+                             for seg in self.plan.segments]
+        return self._seg_ops
 
     # ------------------------------------------------------------ compile
     def _build(self):
@@ -162,7 +172,8 @@ class PlanExecutor:
             if rec is not None and rec.enabled:
                 rec.add(segment_label(self.trace.kernels,
                                       self.plan.segments[si]),
-                        "dispatch", t0, t1, tid=1, segment=si)
+                        "dispatch", t0, t1, tid=1, segment=si,
+                        ops=self.segment_operators()[si])
             for v, o in zip(outs, res):
                 env[v] = o
 

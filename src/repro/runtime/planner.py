@@ -117,8 +117,15 @@ def simulate_plan(kernels: Sequence, plan: LaunchPlan, spec: PlatformSpec, *,
         start = max(t_host, device_free)
         end = start + dur
         device_free = end
+        # operator provenance rides onto the modeled event when the
+        # segment is homogeneous (always true for eager singletons);
+        # mixed fused segments stay untagged — attribution splits those
+        # fractionally from segment_ops instead
+        ops = {getattr(kernels[i], "operator", "") for i in seg}
         events.append(KernelEvent(segment_label(kernels, seg),
-                                  launch_begin, t_host, start, end))
+                                  launch_begin, t_host, start, end,
+                                  operator=ops.pop() if len(ops) == 1
+                                  else ""))
     return events
 
 

@@ -5,17 +5,30 @@ serving engine imports ``repro.telemetry.metrics``, so this package init
 must not import the engine back (``characterize`` does).  The heavy
 driver is re-exported lazily.
 """
+from repro.telemetry.attribution import (  # noqa: F401
+    AttributionReport, OperatorRow, OpTag, attribute_events, merge_report,
+    parse_operator, segment_ops,
+)
 from repro.telemetry.metrics import (  # noqa: F401
     LatencySummary, RequestTiming, percentile, percentiles, summarize,
+)
+from repro.telemetry.registry import (  # noqa: F401
+    Counter, Gauge, Histogram, MetricsRegistry, exponential_buckets,
 )
 from repro.telemetry.spans import Span, SpanRecorder  # noqa: F401
 
 _LAZY = ("CharacterizationResult", "MeasuredPoint", "TPSweepPoint",
          "characterize", "classify_measured_sweep", "memory_pressure_sweep",
-         "run_point", "tp_sweep")
+         "run_point", "tp_sweep",
+         # monitor imports characterize (which imports the engine), so it
+         # must stay lazy for the same reason characterize does
+         "BoundednessMonitor")
 
 
 def __getattr__(name):
+    if name == "BoundednessMonitor":
+        from repro.telemetry.monitor import BoundednessMonitor
+        return BoundednessMonitor
     if name in _LAZY:
         from repro.telemetry import characterize as _c
         return getattr(_c, name)

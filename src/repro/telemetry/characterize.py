@@ -74,6 +74,7 @@ class MeasuredPoint:
     spans: list = field(default_factory=list)           # telemetry Spans
     modeled_events: list = field(default_factory=list)  # one decode step
     decode_anchors: list = field(default_factory=list)  # decode span starts
+    attribution: object = None     # AttributionReport of one decode step
 
     def row(self) -> dict:
         out = {
@@ -100,6 +101,8 @@ class MeasuredPoint:
             "mean_pool_utilization": round(self.mean_pool_utilization, 3),
             "peak_pool_utilization": round(self.peak_pool_utilization, 3),
         }
+        if self.attribution is not None:
+            out["attribution"] = self.attribution.as_dicts()
         out.update(self.latency.row())
         return out
 
@@ -185,6 +188,7 @@ def run_point(cfg, params, workload: Workload, *, batch: int,
         spans=list(rec.spans),
         modeled_events=(list(planned.modeled_events) if planned else []),
         decode_anchors=[s.t0 for s in decode_spans[:MAX_DEVICE_ANCHORS]],
+        attribution=(planned.attribution if planned else None),
     )
 
 

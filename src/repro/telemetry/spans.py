@@ -37,14 +37,43 @@ class Span:
 
 @dataclass
 class SpanRecorder:
+    """``max_spans=None`` (the default) keeps every span — right for
+    short characterize runs that export full traces.  Long serving runs
+    pass a cap: the recorder then keeps only the NEWEST ``max_spans``
+    spans (ring-buffer semantics) and counts evictions in ``dropped``,
+    also published as the ``telemetry_spans_dropped_total`` counter when
+    a registry is bound."""
+
     enabled: bool = True
     spans: list = field(default_factory=list)
+    max_spans: Optional[int] = None
+    dropped: int = 0
+
+    def __post_init__(self):
+        if self.max_spans is not None and self.max_spans < 1:
+            raise ValueError(f"max_spans must be >= 1, got {self.max_spans}")
+        self._dropped_total = None
+
+    def bind_metrics(self, registry) -> None:
+        self._dropped_total = registry.counter(
+            "telemetry_spans_dropped_total",
+            "spans evicted from the SpanRecorder ring buffer")
+        if self.dropped:
+            self._dropped_total.inc(self.dropped)
 
     def add(self, name: str, cat: str, t0: float, t1: float, *,
             tid: int = TID_HOST, **args) -> None:
-        if self.enabled:
-            self.spans.append(Span(name, cat, t0, t1, tid=tid,
-                                   args=args or None))
+        if not self.enabled:
+            return
+        self.spans.append(Span(name, cat, t0, t1, tid=tid,
+                               args=args or None))
+        if self.max_spans is not None and len(self.spans) > self.max_spans:
+            # one add() can overflow by at most one span, so a single
+            # pop-from-front keeps the newest max_spans entries
+            self.spans.pop(0)
+            self.dropped += 1
+            if self._dropped_total is not None:
+                self._dropped_total.inc()
 
     @contextmanager
     def span(self, name: str, cat: str = "host", *, tid: int = TID_HOST,

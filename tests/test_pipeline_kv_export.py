@@ -100,9 +100,13 @@ def test_chrome_trace_export(tmp_path):
     ks = [Kernel(i, f"k{i}", None, 1e6, 1e5, ()) for i in range(5)]
     ev = simulate(ks, PLATFORMS["GH200"])
     doc = to_chrome_trace(ev, "GH200")
-    assert len(doc["traceEvents"]) == 10
-    host = [e for e in doc["traceEvents"] if e["tid"] == 0]
-    dev = [e for e in doc["traceEvents"] if e["tid"] == 1]
+    # host + kernel slice plus an s/f flow pair per kernel
+    assert len(doc["traceEvents"]) == 20
+    host = [e for e in doc["traceEvents"]
+            if e["tid"] == 0 and e["ph"] == "X"]
+    dev = [e for e in doc["traceEvents"]
+           if e["tid"] == 1 and e["ph"] == "X"]
+    assert len(host) == len(dev) == 5
     # device events never start before their launch call
     for h, d in zip(host, dev):
         assert d["ts"] >= h["ts"]

@@ -1,0 +1,78 @@
+"""Fleet scaling bench: routed throughput + TTFT vs replica count.
+
+Drains one fixed Poisson chatbot workload through the router at replica
+counts 1 and 2 (same requests, same arrival schedule, same per-replica
+engine config) and reports, per count, fleet throughput over the virtual
+makespan and TTFT p50/p99 off each replica's serving clock.  The derived
+column carries the 2-replica makespan ratio.  On a CPU-reduced model a
+single engine already batch-saturates its decode steps, so the honest
+expectation is p50 TTFT dropping with replica count while makespan stays
+near 1.0x — the queueing win arrives before the throughput win, exactly
+the data-parallel serving tradeoff.  A routing regression (a policy
+pinning everything to one replica) shows up as the TTFT split
+collapsing back to the 1-replica numbers.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import FAST, csv_row
+from repro.configs import get_config, reduced
+from repro.inference.engine import Request, ServeEngine
+from repro.inference.fleet import ReplicaFleet
+from repro.inference.router import RequestRouter
+from repro.models import init_params
+from repro.telemetry.metrics import percentile
+from repro.workload import sample_requests
+
+ARCH = "smollm-360m"
+MAX_LEN = 64
+N_REQUESTS = 6 if FAST else 10
+REPLICA_COUNTS = (1, 2)
+POLICY = "least-queue-depth"
+
+
+def _requests(wl):
+    return [Request(w.rid, prompt=list(w.prompt),
+                    max_new_tokens=w.max_new_tokens, arrival_s=w.arrival_s)
+            for w in wl.requests]
+
+
+def run() -> list[str]:
+    rows = []
+    cfg = reduced(get_config(ARCH), n_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    wl = sample_requests("chatbot", N_REQUESTS, seed=0,
+                         vocab_size=cfg.vocab_size, prompt_cap=12,
+                         output_cap=6, time_scale=100.0)
+    kw = dict(max_batch=2, max_len=MAX_LEN, plan="jit")
+
+    # warmup: pay jit/plan compile once so measured drains are steady-state
+    ServeEngine(cfg, params, **kw).run(_requests(wl)[:2])
+
+    makespans = {}
+    for n in REPLICA_COUNTS:
+        fleet = ReplicaFleet(cfg, params, replicas=n, **kw)
+        router = RequestRouter(fleet, policy=POLICY)
+        report = router.route(_requests(wl))
+        if len(report.completed) != N_REQUESTS:
+            raise RuntimeError(
+                f"fleet of {n} drained {len(report.completed)}/"
+                f"{N_REQUESTS} requests")
+        ttft = sorted(t for rep in fleet.live()
+                      for t in rep.engine.stats.ttft_s.values())
+        tokens = sum(rep.engine.stats.tokens_out for rep in fleet.live())
+        makespans[n] = report.clock_s
+        tput = tokens / report.clock_s if report.clock_s else 0.0
+        us_per_tok = (report.clock_s / tokens * 1e6) if tokens else 0.0
+        rows.append(csv_row(
+            f"router/replicas{n}_per_token", us_per_tok,
+            f"policy={POLICY};tok_per_s={tput:.1f};"
+            f"ttft_p50_ms={percentile(ttft, 50.0) * 1e3:.1f};"
+            f"ttft_p99_ms={percentile(ttft, 99.0) * 1e3:.1f};"
+            f"makespan_s={report.clock_s:.3f}"))
+    speedup = (makespans[1] / makespans[2]
+               if makespans.get(2) else 0.0)
+    rows.append(csv_row("router/fleet_speedup_2x", 0.0,
+                        f"makespan_1r/makespan_2r={speedup:.3f}x"))
+    return rows

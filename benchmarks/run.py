@@ -39,6 +39,7 @@ BENCHES = [
     ("sharded_decode", "benchmarks.bench_sharded_decode"),  # tensor parallel
     ("speculative_decode", "benchmarks.bench_speculative_decode"),
     ("observability", "benchmarks.bench_observability"),  # telemetry gate
+    ("router", "benchmarks.bench_router"),                # replica fleet
 ]
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines.json")

@@ -127,6 +127,7 @@ class AccountingMixin:
     """
 
     def _init_accounting(self) -> None:
+        """Zero the per-call account and per-device dispatch map."""
         self.last = CallAccount()
         self._device_dispatches: dict = {}
         self._m_calls = None
@@ -171,4 +172,5 @@ class AccountingMixin:
 
     @property
     def device_dispatches(self) -> dict:
+        """Cumulative host dispatches per device stream."""
         return dict(self._device_dispatches)

@@ -47,6 +47,8 @@ class _PlannedFn:
         self.attribution = None         # AttributionReport, one invocation
 
     def _build(self, *args):
+        """Trace the body, choose the LaunchPlan for this strategy, and
+        compile the per-segment executor (once, on first call)."""
         from repro.core.tracing import trace_fn
         from repro.runtime import LaunchPlan, PlanExecutor, Planner
         trace = trace_fn(self.fn, *args)
@@ -89,10 +91,12 @@ class _PlannedFn:
 
     @property
     def n_launches(self) -> int:
+        """Host dispatches per invocation (0 before first build)."""
         return self.executor.n_launches if self.executor else 0
 
     @property
     def rule_names(self) -> list:
+        """Fusion-rule names overlaid on the chosen plan."""
         return self.plan.rule_names() if self.plan is not None else []
 
 
@@ -129,14 +133,18 @@ class LocalBackend(AccountingMixin):
 
     # ------------------------------------------------------------ caches
     def init_contiguous_cache(self):
+        """Fresh per-slot contiguous KV cache on the local device."""
         return make_cache(self.cfg, self.B, self.T, src_len=1,
                           dtype=self.cfg.cdtype)
 
     def init_paged_cache(self, kv):
+        """Fresh pooled KV pages for the paged-cache layout."""
         return kv.make_pages()
 
     # ------------------------------------------------------------ helpers
     def _planned_account(self, pf: _PlannedFn) -> CallAccount:
+        """Charge one launch-plan call: measured per-segment dispatch
+        times plus the plan's modeled TKLQT and attribution."""
         return self._charge(CallAccount(
             dispatches=pf.n_launches,
             host_time_s=sum(pf.last_host_times),
@@ -148,11 +156,14 @@ class LocalBackend(AccountingMixin):
             attribution=pf.attribution))
 
     def _jit_account(self, t0: float) -> CallAccount:
+        """Charge one jit call: a single dispatch, measured host time."""
         return self._charge(CallAccount(
             dispatches=1, host_time_s=time.perf_counter() - t0))
 
     # ------------------------------------------------------------ steps
     def prefill(self, cache, tokens, slot: int, plen: int):
+        """Write one prompt into a contiguous-cache slot; returns
+        (last-position logits, updated cache)."""
         if self.plan == "jit":
             t0 = time.perf_counter()
             logits, cache = self._prefill(self.params, cache, tokens,
@@ -172,6 +183,7 @@ class LocalBackend(AccountingMixin):
         return logits, cache
 
     def decode(self, cache, tokens, lengths):
+        """One batched decode step over the contiguous cache."""
         if self.plan == "jit":
             t0 = time.perf_counter()
             logits, cache = self._decode(self.params, cache, tokens, lengths)
@@ -187,6 +199,7 @@ class LocalBackend(AccountingMixin):
         return logits, cache
 
     def prefill_chunk(self, cache, tokens, bt_row, t0_index):
+        """Write one prompt chunk into paged KV through a block table."""
         if self.plan == "jit":
             t0 = time.perf_counter()
             logits, cache = self._prefill_paged(self.params, cache, tokens,
@@ -204,6 +217,7 @@ class LocalBackend(AccountingMixin):
         return logits, cache
 
     def paged_decode(self, cache, tokens, lengths, block_tables):
+        """One batched decode step gathering KV through block tables."""
         if self.plan == "jit":
             t0 = time.perf_counter()
             logits, cache = self._decode_paged(self.params, cache, tokens,
@@ -220,6 +234,7 @@ class LocalBackend(AccountingMixin):
         return logits, cache
 
     def verify(self, cache, tokens, lengths):
+        """Speculative verify: score k+1 positions in one forward."""
         # speculative verify is jit-dispatched in every plan mode: the
         # launch-plan runtime replays fixed single-token streams, and the
         # draft/verify launch trade is priced by Planner(draft_launches=)
@@ -230,6 +245,7 @@ class LocalBackend(AccountingMixin):
         return logits, cache
 
     def paged_verify(self, cache, tokens, lengths, block_tables):
+        """Paged-cache variant of ``verify``."""
         t0 = time.perf_counter()
         logits, cache = self._verify_paged(self.params, cache, tokens,
                                            lengths, block_tables)
@@ -239,4 +255,5 @@ class LocalBackend(AccountingMixin):
     # ------------------------------------------------------- accounting
     @property
     def planned_decode(self) -> Optional[_PlannedFn]:
+        """The decode ``_PlannedFn`` in launch-plan modes (else None)."""
         return self._planned_decode

@@ -46,6 +46,7 @@ _SUPPORTED_KINDS = ("attn", "attn_local")
 
 
 def _validate_tp(cfg: ModelConfig, tp: int) -> None:
+    """Reject configs the head-sharded shard_map body cannot serve."""
     if tp < 2:
         raise ValueError(f"ShardedBackend needs tp >= 2, got {tp} "
                          "(use LocalBackend for single-device serving)")
@@ -137,6 +138,7 @@ class ShardedBackend(AccountingMixin):
 
     # ------------------------------------------------------------ caches
     def init_contiguous_cache(self):
+        """Head-sharded contiguous KV cache placed on the tp mesh."""
         cache = make_cache(self.cfg, self.B, self.T, src_len=1,
                            dtype=self.cfg.cdtype)
         specs = cache_specs(cache, self.cfg, self.mesh, dp=("data",),
@@ -146,6 +148,7 @@ class ShardedBackend(AccountingMixin):
                               shardings_for(cache, specs, self.mesh))
 
     def init_paged_cache(self, kv):
+        """Head-sharded pooled KV pages placed on the tp mesh."""
         pages = kv.make_pages()
         specs = paged_cache_specs(pages, self.cfg, self.mesh, tp="model")
         self._cache_spec_tree = specs
@@ -172,6 +175,8 @@ class ShardedBackend(AccountingMixin):
         return fn
 
     def _call(self, key, fn, args):
+        """Invoke one sharded step and charge tp dispatch streams plus
+        the psum traffic captured at trace time (priced per platform)."""
         mark = len(self._trace_log)
         t0 = time.perf_counter()
         logits, cache = fn(self.params, *args)
@@ -195,6 +200,7 @@ class ShardedBackend(AccountingMixin):
 
     # ------------------------------------------------------------ steps
     def prefill(self, cache, tokens, slot: int, plen: int):
+        """Sharded prompt prefill into a contiguous-cache slot."""
         key = ("prefill", tokens.shape[1], plen)
         fn = self._fns.get(key)
         if fn is None:
@@ -205,18 +211,21 @@ class ShardedBackend(AccountingMixin):
                                     jnp.asarray(slot, jnp.int32)))
 
     def decode(self, cache, tokens, lengths):
+        """One sharded batched decode step (contiguous cache)."""
         key = ("decode",)
         fn = self._fns.get(key) or self._wrapped(
             key, self._decode_body, (P(None, None), P(None)))
         return self._call(key, fn, (cache, tokens, lengths))
 
     def prefill_chunk(self, cache, tokens, bt_row, t0_index):
+        """Sharded paged prompt-chunk write through a block table."""
         key = ("prefill_chunk", tokens.shape[1])
         fn = self._fns.get(key) or self._wrapped(
             key, self._paged_prefill_body, (P(None, None), P(None), P()))
         return self._call(key, fn, (cache, tokens, bt_row, t0_index))
 
     def paged_decode(self, cache, tokens, lengths, block_tables):
+        """One sharded batched decode step over paged KV."""
         key = ("paged_decode",)
         fn = self._fns.get(key) or self._wrapped(
             key, self._paged_decode_body,
@@ -224,6 +233,7 @@ class ShardedBackend(AccountingMixin):
         return self._call(key, fn, (cache, tokens, lengths, block_tables))
 
     def verify(self, cache, tokens, lengths):
+        """Sharded speculative verify (k+1 positions, one forward)."""
         # speculative verify composes with tp: same shard_map body family,
         # replicated (B, k+1, V) logits out (tiny at decode widths)
         key = ("verify",)
@@ -233,6 +243,7 @@ class ShardedBackend(AccountingMixin):
         return self._call(key, fn, (cache, tokens, lengths))
 
     def paged_verify(self, cache, tokens, lengths, block_tables):
+        """Paged-cache variant of sharded ``verify``."""
         key = ("paged_verify",)
         fn = self._fns.get(key) or self._wrapped(
             key, self._paged_verify_body,
@@ -243,4 +254,5 @@ class ShardedBackend(AccountingMixin):
     # ------------------------------------------------------- accounting
     @property
     def planned_decode(self):
+        """Launch-plan decode handle — always None (jit-only backend)."""
         return None

@@ -87,6 +87,7 @@ class SpeculativeBackend:
 
     # ------------------------------------------------------------ draft side
     def init_draft_cache(self):
+        """Fresh contiguous KV cache for the truncated draft model."""
         return make_cache(self.cfg_draft, self.B, self.T, src_len=1,
                           dtype=self.cfg_draft.cdtype)
 
@@ -103,6 +104,7 @@ class SpeculativeBackend:
             "measured host time of draft forwards")
 
     def _charge_draft(self, n_calls: int, host_time: float) -> CallAccount:
+        """Account draft forwards as their own dispatch stream."""
         # the draft is its own dispatch stream on the target's lead device:
         # launches counted apart from the target stream, priced at one
         # stream's host cost (dispatch_fanout_s at tp=1)
@@ -117,6 +119,7 @@ class SpeculativeBackend:
         return self.last
 
     def draft_prefill(self, draft_cache, tokens, slot: int, plen: int):
+        """Prefill the draft cache with a slot's prompt."""
         t0 = time.perf_counter()
         logits, draft_cache = self._draft_prefill(
             self.draft_params, draft_cache, tokens, slot, plen)
@@ -124,6 +127,7 @@ class SpeculativeBackend:
         return logits, draft_cache
 
     def draft_step(self, draft_cache, tokens, positions, lengths):
+        """One autoregressive draft proposal step."""
         t0 = time.perf_counter()
         logits, draft_cache = self._draft_step(
             self.draft_params, draft_cache, tokens, positions, lengths)
@@ -132,39 +136,50 @@ class SpeculativeBackend:
 
     # ---------------------------------------------------- delegated protocol
     def init_contiguous_cache(self):
+        """Delegate target-cache construction to the wrapped backend."""
         return self.target.init_contiguous_cache()
 
     def init_paged_cache(self, kv):
+        """Delegate paged-cache construction to the wrapped backend."""
         return self.target.init_paged_cache(kv)
 
     def _delegate(self, out):
+        """Forward a target-backend result, mirroring its account."""
         self.last = self.target.last
         return out
 
     def prefill(self, cache, tokens, slot: int, plen: int):
+        """Target prefill (delegated)."""
         return self._delegate(self.target.prefill(cache, tokens, slot, plen))
 
     def decode(self, cache, tokens, lengths):
+        """Target decode step (delegated)."""
         return self._delegate(self.target.decode(cache, tokens, lengths))
 
     def prefill_chunk(self, cache, tokens, bt_row, t0):
+        """Target paged prompt-chunk write (delegated)."""
         return self._delegate(
             self.target.prefill_chunk(cache, tokens, bt_row, t0))
 
     def paged_decode(self, cache, tokens, lengths, block_tables):
+        """Target paged decode step (delegated)."""
         return self._delegate(
             self.target.paged_decode(cache, tokens, lengths, block_tables))
 
     def verify(self, cache, tokens, lengths):
+        """Target verify of k+1 speculative positions (delegated)."""
         return self._delegate(self.target.verify(cache, tokens, lengths))
 
     def paged_verify(self, cache, tokens, lengths, block_tables):
+        """Target paged verify (delegated)."""
         return self._delegate(
             self.target.paged_verify(cache, tokens, lengths, block_tables))
 
     # ------------------------------------------------------- accounting
     @property
     def device_dispatches(self) -> dict:
+        """Target per-device dispatches with draft launches merged onto
+        the lead device's stream."""
         # draft launches land on the target's lead device stream
         merged = dict(self.target.device_dispatches)
         if self._draft_device_dispatches:
@@ -175,4 +190,5 @@ class SpeculativeBackend:
 
     @property
     def planned_decode(self):
+        """The wrapped backend's launch-plan decode handle."""
         return self.target.planned_decode

@@ -58,6 +58,8 @@ OFFLOAD_MODES = ("none", "host")
 
 @dataclass
 class Request:
+    """One serving request: prompt in, greedy continuation out."""
+
     rid: int
     prompt: list
     max_new_tokens: int = 16
@@ -197,45 +199,54 @@ class EngineStats:
 
     @property
     def dispatches_per_decode_step(self) -> float:
+        """Mean host dispatches (kernel launches) per decode step."""
         return (self.decode_dispatches / self.decode_steps
                 if self.decode_steps else 0.0)
 
     @property
     def fused_dispatches_per_decode_step(self) -> float:
+        """Mean fused-kernel launches per decode step."""
         return (self.fused_dispatches / self.decode_steps
                 if self.decode_steps else 0.0)
 
     @property
     def ttft_s(self) -> dict:
+        """Time-to-first-token per request id (first-token seen only)."""
         return {rid: t.ttft_s for rid, t in self.timings.items()
                 if not math.isnan(t.first_token_s)}
 
     @property
     def e2e_s(self) -> dict:
+        """End-to-end latency per completed request id."""
         return {rid: t.e2e_s for rid, t in self.timings.items()
                 if not math.isnan(t.done_s)}
 
     @property
     def itl_samples_s(self) -> list:
+        """Every inter-token-latency gap across all requests."""
         return [g for t in self.timings.values() for g in t.itl_s]
 
     @property
     def mean_ttft_s(self) -> float:
+        """Mean time-to-first-token over requests that emitted one."""
         ttft = self.ttft_s
         return sum(ttft.values()) / len(ttft) if ttft else 0.0
 
     @property
     def mean_itl_s(self) -> float:
+        """Mean inter-token latency over all sampled gaps."""
         itl = self.itl_samples_s
         return sum(itl) / len(itl) if itl else 0.0
 
     @property
     def mean_block_pool_utilization(self) -> float:
+        """Mean paged block-pool occupancy across sampled steps."""
         u = self.block_pool_utilization
         return sum(u) / len(u) if u else 0.0
 
     @property
     def peak_block_pool_utilization(self) -> float:
+        """Peak paged block-pool occupancy across sampled steps."""
         return max(self.block_pool_utilization, default=0.0)
 
     @property
@@ -278,6 +289,18 @@ class EngineStats:
 
 
 class ServeEngine:
+    """Continuous-batching serving scheduler over an execution backend.
+
+    The engine is pure policy — slot admission, chunked prefill,
+    preempt/offload/resume, greedy sampling, virtual-clock accounting —
+    and delegates every device interaction (cache placement, the step
+    kinds, launch accounting) to its ``ExecutionBackend``: local
+    (``tp=1``), tensor-parallel sharded (``tp>=2``), optionally wrapped
+    speculative.  Drive it closed-loop with ``run(requests)`` or
+    open-loop/steppable with ``submit()`` + ``tick()`` (the replica-
+    fleet router uses the latter).
+    """
+
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  max_len: int = 256, greedy: bool = True,
                  plan: str = "jit", platform: str = "TPU-v5e",
@@ -418,6 +441,7 @@ class ServeEngine:
             self.cache = self.backend.init_contiguous_cache()
         self._prefill_tasks: dict = {}      # slot -> _PrefillTask
         self._preempted: list = []          # evicted Requests awaiting resume
+        self._pending: list = []            # submitted, not yet admitted
         self._admit_seq = 0                 # victim ordering (youngest first)
         self._last_step_progressed = True
         self.lengths = np.zeros(max_batch, np.int32)
@@ -460,15 +484,18 @@ class ServeEngine:
 
     @staticmethod
     def _bucket(n: int) -> int:
+        """Round a length to its power-of-two compile bucket (min 8)."""
         return max(8, 1 << (n - 1).bit_length())
 
     def _free_slot(self) -> Optional[int]:
+        """Index of the first open batch slot, or None when full."""
         for i, s in enumerate(self.slots):
             if s is None:
                 return i
         return None
 
     def _sample(self, logits_row) -> int:
+        """Greedy token choice from one logits row."""
         return int(jnp.argmax(logits_row))
 
     def _absorb(self, acct: CallAccount, *, decode: bool) -> None:
@@ -567,6 +594,12 @@ class ServeEngine:
 
     # ------------------------------------------------------------ api
     def admit(self, req: Request) -> bool:
+        """Admit one request into a slot and prefill; False = no room.
+
+        Requests whose prompt + decode budget exceed ``max_len`` are
+        rejected outright (status ``rejected``) rather than risking
+        out-of-bounds KV writes.
+        """
         plen = len(req.prompt)
         if plen + req.max_new_tokens > self.T:
             # the full generation cannot fit the KV region: answer with a
@@ -618,6 +651,8 @@ class ServeEngine:
 
     # ------------------------------------------------------------ paged api
     def _admit_paged(self, req: Request) -> bool:
+        """Paged-cache admission: allocate blocks, start (chunked)
+        prefill, or restore/replay a preempted request's KV."""
         slot = self._free_slot()
         if slot is None:
             return False
@@ -648,6 +683,8 @@ class ServeEngine:
 
     def _restore_from_host(self, req: Request, slot: int,
                            entries: int) -> bool:
+        """Re-admit an offloaded request by restoring its host-staged
+        KV blocks into fresh pool pages; False = pool still too full."""
         n_blocks = self.offload_tier.stored_blocks(req.rid)
         if not self.kv.pool.can_alloc(n_blocks):
             return False                   # wait for blocks to free
@@ -691,6 +728,8 @@ class ServeEngine:
         return None
 
     def _preempt(self, slot: int) -> None:
+        """Evict a slot's request: offload its KV to host (or discard
+        for recompute-on-resume) and free its blocks."""
         req = self.slots[slot]
         entries = int(self.lengths[slot])
         ids = self.kv.pool.owned(req.rid)
@@ -728,6 +767,7 @@ class ServeEngine:
         return True
 
     def _release_slot(self, slot: int, req: Request) -> None:
+        """Free a finished request's slot, blocks, and host staging."""
         self.slots[slot] = None
         self.lengths[slot] = 0
         freed = self.kv.pool.free(req.rid)
@@ -736,6 +776,8 @@ class ServeEngine:
             self.offload_tier.drop(req.rid)
 
     def _run_prefill_chunk(self, task: _PrefillTask, chunk_len: int) -> None:
+        """Write the next ``chunk_len`` prompt tokens of one in-flight
+        prefill into the paged cache (one backend call)."""
         toks = np.asarray([task.toks[task.pos:task.pos + chunk_len]],
                           np.int32)
         bt = jnp.asarray(self.kv.table_row(task.req.rid))
@@ -758,6 +800,8 @@ class ServeEngine:
             self._record_segments(acct, t_begin)
 
     def _finish_prefill(self, task: _PrefillTask) -> None:
+        """Complete a chunked prefill: emit the first token (or nothing
+        on a replay) and move the slot into decode."""
         req, slot = task.req, task.slot
         del self._prefill_tasks[slot]
         self.lengths[slot] = len(task.toks)
@@ -800,6 +844,9 @@ class ServeEngine:
         return progressed
 
     def _paged_decode_step(self) -> bool:
+        """One paged decode round: grow block tables (preempting if the
+        pool is exhausted), step ready rows, advance chunked prefills.
+        Returns False when nothing could progress."""
         active = [i for i, s in enumerate(self.slots)
                   if s is not None and i not in self._prefill_tasks]
         # grow every row's table to cover the entry this step writes;
@@ -1086,6 +1133,91 @@ class ServeEngine:
                 if timing is not None:
                     timing.done_s = self.now
 
+    # ------------------------------------------------------------ run loop
+    def submit(self, req: Request) -> None:
+        """Enqueue one request for admission (open-loop ingress).
+
+        The engine holds it until the virtual clock reaches
+        ``req.arrival_s`` AND a slot frees; ``tick()`` drains the queue.
+        This is the entry point an external router uses to feed a replica
+        incrementally — ``run()`` is submit-everything-then-drain.
+        """
+        self._pending.append(req)
+        # stable sort: equal arrival times keep submission order, so a
+        # router-fed replica admits exactly like run() over the same list
+        self._pending.sort(key=lambda r: r.arrival_s)
+
+    @property
+    def busy(self) -> bool:
+        """True while any work remains: queued, preempted, or in a slot."""
+        return bool(self._pending) or bool(self._preempted) or \
+            any(s is not None for s in self.slots)
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests admitted-or-waiting on this engine (pending +
+        preempted + active slots) — the router's load signal."""
+        return (len(self._pending) + len(self._preempted)
+                + sum(1 for s in self.slots if s is not None))
+
+    @property
+    def outstanding_tokens(self) -> int:
+        """Un-served work in tokens: full prompt+budget for queued
+        requests, remaining decode budget for admitted ones.  Routing
+        tie-breaker — two replicas with equal request counts can hold
+        very different amounts of work."""
+        n = sum(len(r.prompt) + r.max_new_tokens for r in self._pending)
+        n += sum(r.max_new_tokens - len(r.generated)
+                 for r in self._preempted)
+        n += sum(s.max_new_tokens - len(s.generated)
+                 for s in self.slots if s is not None)
+        return n
+
+    def tick(self) -> bool:
+        """One scheduling round: fast-forward over idle gaps, admit every
+        eligible request (resumed ones first — they hold generation
+        progress and possibly offloaded KV), then one ``step()``.
+
+        Returns False (doing nothing) once no work remains.  ``run()`` is
+        a tick loop; a fleet router interleaves ticks of many replicas on
+        one global clock.
+        """
+        if not self.busy:
+            return False
+        idle = not any(s is not None for s in self.slots) \
+            and not self._preempted
+        if idle and self._pending and \
+                self._pending[0].arrival_s > self.now:
+            self.now = self._pending[0].arrival_s
+        admitted = False
+        # resumed requests first: they hold generation progress (and
+        # possibly offloaded KV) — finishing them frees blocks fastest
+        while self._preempted and self._free_slot() is not None:
+            if not self._admit_paged(self._preempted[0]):
+                break               # no blocks to restore into yet
+            self._preempted.pop(0)
+            admitted = True
+        while (self._pending and self._pending[0].arrival_s <= self.now
+               and self._free_slot() is not None):
+            if self.admit(self._pending[0]):
+                self._pending.pop(0)
+                admitted = True
+            else:
+                break
+        self.step()
+        if self.cache_mode == "paged" and not admitted \
+                and not self._last_step_progressed \
+                and (self._preempted
+                     or any(s is not None for s in self.slots)):
+            # nothing ran and nothing was admitted: no future step can
+            # free blocks either — the pool cannot hold this workload
+            raise RuntimeError(
+                "paged engine deadlocked: block pool "
+                f"({self.kv.num_blocks} x {self.kv.block_size} tokens) "
+                "too small for even one in-flight request; raise "
+                "num_blocks")
+        return True
+
     def run(self, requests: list[Request]) -> list[Request]:
         """Continuous batching: admit whenever a slot frees.
 
@@ -1094,44 +1226,16 @@ class ServeEngine:
         next arrival is in the future, the clock fast-forwards to it — the
         idle gap is honored on the virtual timeline without wall-time cost.
         """
-        pending = sorted(requests, key=lambda r: r.arrival_s)
+        for r in sorted(requests, key=lambda r: r.arrival_s):
+            self.submit(r)
         done: list[Request] = []
-        while pending or self._preempted or \
-                any(s is not None for s in self.slots):
-            idle = not any(s is not None for s in self.slots) \
-                and not self._preempted
-            if idle and pending and pending[0].arrival_s > self.now:
-                self.now = pending[0].arrival_s
-            admitted = False
-            # resumed requests first: they hold generation progress (and
-            # possibly offloaded KV) — finishing them frees blocks fastest
-            while self._preempted and self._free_slot() is not None:
-                if not self._admit_paged(self._preempted[0]):
-                    break               # no blocks to restore into yet
-                self._preempted.pop(0)
-                admitted = True
-            while (pending and pending[0].arrival_s <= self.now
-                   and self._free_slot() is not None):
-                if self.admit(pending[0]):
-                    pending.pop(0)
-                    admitted = True
-                else:
-                    break
-            self.step()
-            if self.cache_mode == "paged" and not admitted \
-                    and not self._last_step_progressed \
-                    and (self._preempted
-                         or any(s is not None for s in self.slots)):
-                # nothing ran and nothing was admitted: no future step can
-                # free blocks either — the pool cannot hold this workload
-                raise RuntimeError(
-                    "paged engine deadlocked: block pool "
-                    f"({self.kv.num_blocks} x {self.kv.block_size} tokens) "
-                    "too small for even one in-flight request; raise "
-                    "num_blocks")
+        while self.tick():
             for r in requests:
                 if r.done and r not in done:
                     done.append(r)
+        for r in requests:
+            if r.done and r not in done:
+                done.append(r)
         return done
 
     def reset(self):
@@ -1153,6 +1257,7 @@ class ServeEngine:
         if self.speculative:
             self.draft_cache = jax.tree.map(jnp.zeros_like, self.draft_cache)
             self.draft_lengths = np.zeros(self.B, np.int32)
+        self._pending = []
         if self.cache_mode == "paged":
             self.kv.reset()
             self._prefill_tasks = {}

@@ -37,6 +37,27 @@ def plan_reshape(n_devices: int, lost: int = 0) -> ElasticPlan:
     return ElasticPlan(n_devices, avail, (avail // model, model))
 
 
+def plan_fleet(n_devices: int, tp: int, lost: int = 0) -> ElasticPlan:
+    """Serving-fleet variant of ``plan_reshape``: model axis pinned.
+
+    A serving fleet cannot reshard tensor-parallel weights on the fly
+    the way training restores can, so the model axis stays at the
+    serving ``tp`` and only the data axis (replica count) tracks the
+    surviving device pool: ``replicas = (n_devices - lost) // tp``.
+    The router then drains surplus replicas (``ReplicaFleet.
+    remove_replica``) or attaches new ones — byte-deterministic because
+    admitted requests never move between replicas.
+    """
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    avail = n_devices - lost
+    if avail < tp:
+        raise ValueError(
+            f"{avail} surviving devices cannot hold even one tp={tp} "
+            f"replica (need >= {tp})")
+    return ElasticPlan(n_devices, avail, (avail // tp, tp))
+
+
 def elastic_restore(ckpt: CheckpointManager, step: int, target_tree,
                     cfg: ModelConfig, mesh=None):
     """Restore a checkpoint onto the CURRENT device pool."""

@@ -39,9 +39,26 @@ def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
     return jax.make_mesh(shape, axes)
 
 
+def make_fleet_mesh(replicas: int, tp: int = 1):
+    """``(data=replicas, model=tp)`` grid for a serving replica fleet.
+
+    The data axis indexes replicas (each serves whole requests), the
+    model axis is each replica's tensor-parallel degree — the same two
+    axes training uses, so a deployment can flip between the two without
+    re-slicing its device pool.  Validates the pool holds replicas*tp
+    devices; on an undersized pool (CPU CI) the fleet runs unvalidated
+    with replicas time-multiplexing the local devices instead.
+    """
+    if replicas < 1:
+        raise ValueError(f"replicas must be >= 1, got {replicas}")
+    return make_host_mesh(data=replicas, model=tp)
+
+
 def dp_axes_of(mesh) -> tuple[str, ...]:
+    """Mesh axis names that carry data parallelism."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
 def tp_axis_of(mesh) -> str:
+    """Mesh axis name that carries tensor parallelism."""
     return "model"

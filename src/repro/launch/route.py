@@ -1,0 +1,196 @@
+"""Replica-fleet serving launcher: workload traffic through one router.
+
+    PYTHONPATH=src python -m repro.launch.route --arch smollm-360m \
+        --reduced --replicas 2 --scenario chatbot --requests 16
+
+Builds a ``ReplicaFleet`` of ``--replicas`` full serving engines (each
+takes the same ``--plan`` / ``--cache`` / ``--tp`` options as
+``repro.launch.serve``), generates open-loop traffic from a named
+workload scenario, and drains it through the ``RequestRouter`` with a
+pluggable ``--policy``.  ``--stream`` prints one JSON line per emitted
+token as replicas produce them; the final line is the fleet report
+(per-replica stats, routing counters, TTFT percentiles, throughput).
+
+Elasticity under load: ``--remove-at K`` drains replica 0 after the Kth
+routing decision (its queued requests re-enter the router queue; its
+admitted ones finish in place), ``--add-at M`` attaches a fresh replica
+after the Mth — the same ``launch.elastic.plan_fleet`` arithmetic a
+device-pool change would trigger.  ``--metrics-out`` writes the fleet
+snapshot: aggregated ``fleet_*``/``router_*`` families with per-replica
+labels plus each replica's full registry dump.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.core.fusion import json_sanitize
+from repro.inference.engine import (CACHE_MODES, PLAN_STRATEGIES, Request,
+                                    ServeEngine)
+from repro.inference.fleet import ReplicaFleet
+from repro.inference.router import POLICIES, RequestRouter
+from repro.configs import get_config, reduced
+from repro.models import init_params
+from repro.telemetry.metrics import percentile
+from repro.workload import list_scenarios, sample_requests
+
+
+def build_requests(wl) -> list:
+    """Workload records -> engine Requests (arrival times preserved)."""
+    return [Request(w.rid, prompt=list(w.prompt),
+                    max_new_tokens=w.max_new_tokens, arrival_s=w.arrival_s)
+            for w in wl.requests]
+
+
+def fleet_report(router, report, fleet, wall_s: float) -> dict:
+    """Assemble the CLI's JSON report from one routed drain."""
+    per_replica = {}
+    ttft_all = []
+    tokens = 0
+    for rep in fleet.live():
+        st = rep.engine.stats
+        ttft = sorted(st.ttft_s.values())
+        ttft_all.extend(ttft)
+        tokens += st.tokens_out
+        per_replica[str(rep.rid)] = {
+            "state": rep.state,
+            "dispatched": rep.dispatched,
+            "tokens_out": st.tokens_out,
+            "decode_steps": st.decode_steps,
+            "decode_dispatches": st.decode_dispatches,
+            "preemptions": st.preemptions,
+            "mean_ttft_ms": round(st.mean_ttft_s * 1e3, 3),
+            "clock_s": round(rep.engine.now, 6),
+        }
+    return {
+        "replicas": len(fleet.replicas),
+        "policy": report.policy,
+        "requests_done": len(report.completed),
+        "dispatches": report.dispatches,
+        "requeued": report.requeued,
+        "token_events": report.token_events,
+        "fleet_tokens_out": tokens,
+        "makespan_s": round(report.clock_s, 6),
+        "fleet_tok_per_s": round(tokens / report.clock_s, 1)
+        if report.clock_s else 0.0,
+        "wall_tok_per_s": round(tokens / wall_s, 1) if wall_s else 0.0,
+        "ttft_ms": {
+            "p50": round(percentile(ttft_all, 50.0) * 1e3, 3),
+            "p99": round(percentile(ttft_all, 99.0) * 1e3, 3),
+        } if ttft_all else {},
+        "assignment": {str(k): v for k, v in
+                       sorted(report.assignment.items())},
+        "per_replica": per_replica,
+    }
+
+
+def main():
+    """Entry point for ``python -m repro.launch.route``."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--policy", default="least-queue-depth",
+                    choices=POLICIES)
+    ap.add_argument("--scenario", default="chatbot",
+                    choices=list_scenarios())
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--time-scale", type=float, default=100.0,
+                    help="compress the scenario's arrival timeline so "
+                         "reduced-model runs see queueing, not idle gaps")
+    ap.add_argument("--prompt-cap", type=int, default=24)
+    ap.add_argument("--output-cap", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--plan", default="jit", choices=PLAN_STRATEGIES)
+    ap.add_argument("--platform", default="TPU-v5e")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree per replica; the fleet "
+                         "is the (data=replicas, model=tp) grid")
+    ap.add_argument("--cache", default="contiguous", choices=CACHE_MODES)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=None)
+    ap.add_argument("--validate-mesh", action="store_true",
+                    help="require the device pool to hold the "
+                         "(replicas x tp) fleet mesh (default: simulate "
+                         "on whatever devices exist)")
+    ap.add_argument("--remove-at", type=int, default=None,
+                    help="drain replica 0 after this many dispatches")
+    ap.add_argument("--add-at", type=int, default=None,
+                    help="attach a fresh replica after this many "
+                         "dispatches")
+    ap.add_argument("--stream", action="store_true",
+                    help="print one JSON line per emitted token")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip the warmup drain (measured TTFT then "
+                         "includes jit-compile time)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the fleet metrics snapshot (aggregated "
+                         "families + per-replica registries) as JSON")
+    args = ap.parse_args()
+    if args.replicas < 1:
+        ap.error(f"--replicas must be >= 1, got {args.replicas}")
+    if args.remove_at is not None and args.replicas < 2:
+        ap.error("--remove-at needs --replicas >= 2 (the last serving "
+                 "replica cannot drain)")
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    engine_kwargs = dict(max_batch=args.max_batch, max_len=args.max_len,
+                         plan=args.plan, platform=args.platform,
+                         cache=args.cache, block_size=args.block_size,
+                         num_blocks=args.num_blocks)
+
+    wl = sample_requests(args.scenario, args.requests, seed=args.seed,
+                         vocab_size=cfg.vocab_size,
+                         prompt_cap=args.prompt_cap,
+                         output_cap=args.output_cap,
+                         time_scale=args.time_scale)
+
+    if not args.no_warmup:
+        # pay jit/plan compile on a throwaway engine: replicas share the
+        # process-wide compiled-segment/jit caches, so the measured drain
+        # reports steady-state serving
+        warm = ServeEngine(cfg, params, tp=args.tp, **engine_kwargs)
+        warm.run(build_requests(wl)[:min(2, args.requests)])
+
+    fleet = ReplicaFleet(cfg, params, replicas=args.replicas, tp=args.tp,
+                         validate_mesh=args.validate_mesh, **engine_kwargs)
+
+    def emit(ev):
+        print(json.dumps({"stream": {"rid": ev.rid, "replica": ev.replica,
+                                     "index": ev.index, "token": ev.token,
+                                     "t": round(ev.t, 6)}}))
+
+    router = RequestRouter(fleet, policy=args.policy,
+                           on_token=emit if args.stream else None)
+    actions = []
+    if args.remove_at is not None:
+        actions.append((args.remove_at,
+                        lambda rt: rt.remove_replica(0)))
+    if args.add_at is not None:
+        actions.append((args.add_at, lambda rt: rt.add_replica()))
+
+    t0 = time.time()
+    report = router.route(build_requests(wl), actions=actions)
+    wall = time.time() - t0
+
+    out = {"arch": cfg.name, "scenario": args.scenario, "tp": args.tp}
+    out.update(fleet_report(router, report, fleet, wall))
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as fh:
+            json.dump(json_sanitize(fleet.snapshot()), fh, indent=2,
+                      allow_nan=False)
+        out["metrics_out"] = args.metrics_out
+    print(json.dumps(json_sanitize(out), allow_nan=False))
+
+
+if __name__ == "__main__":
+    main()

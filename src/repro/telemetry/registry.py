@@ -50,6 +50,8 @@ class _Family:
         self.label_names = tuple(labels)
 
     def _key(self, labels: dict) -> tuple:
+        """Series key from kwargs; the FULL declared label set is
+        required — partial or extra labels are registration bugs."""
         if set(labels) != set(self.label_names):
             raise ValueError(
                 f"metric {self.name!r} declared labels "
@@ -67,6 +69,7 @@ class Counter(_Family):
         self._values: dict = {}
 
     def inc(self, amount: float = 1.0, **labels) -> None:
+        """Add ``amount`` (>= 0) to the labeled series."""
         if amount < 0:
             raise ValueError(
                 f"counter {self.name!r} cannot decrease (inc {amount})")
@@ -74,9 +77,11 @@ class Counter(_Family):
         self._values[key] = self._values.get(key, 0.0) + amount
 
     def value(self, **labels) -> float:
+        """Current accumulated value of the labeled series (0 if unseen)."""
         return self._values.get(self._key(labels), 0.0)
 
     def series(self) -> dict:
+        """All series as {label-value tuple: value}."""
         return dict(self._values)
 
 
@@ -90,16 +95,20 @@ class Gauge(_Family):
         self._values: dict = {}
 
     def set(self, value: float, **labels) -> None:
+        """Overwrite the labeled series with ``value``."""
         self._values[self._key(labels)] = float(value)
 
     def add(self, amount: float, **labels) -> None:
+        """Shift the labeled series by ``amount`` (either sign)."""
         key = self._key(labels)
         self._values[key] = self._values.get(key, 0.0) + amount
 
     def value(self, **labels) -> float:
+        """Current value of the labeled series (0 if never set)."""
         return self._values.get(self._key(labels), 0.0)
 
     def series(self) -> dict:
+        """All series as {label-value tuple: value}."""
         return dict(self._values)
 
 
@@ -123,6 +132,7 @@ class Histogram(_Family):
         self._totals: dict = {}
 
     def observe(self, value: float, **labels) -> None:
+        """Record one observation into its bucket (linear scan)."""
         key = self._key(labels)
         counts = self._counts.get(key)
         if counts is None:
@@ -141,9 +151,11 @@ class Histogram(_Family):
         self._totals[key] += 1
 
     def count(self, **labels) -> int:
+        """Total observations recorded for the labeled series."""
         return self._totals.get(self._key(labels), 0)
 
     def sum(self, **labels) -> float:
+        """Sum of all observed values for the labeled series."""
         return self._sums.get(self._key(labels), 0.0)
 
     def quantile(self, q: float, **labels) -> float:
@@ -166,6 +178,7 @@ class Histogram(_Family):
         return math.inf
 
     def series(self) -> dict:
+        """All series as {key: {count, sum, buckets}}."""
         out = {}
         for key, counts in self._counts.items():
             out[key] = {
@@ -183,6 +196,8 @@ class MetricsRegistry:
         self._families: OrderedDict = OrderedDict()
 
     def _get_or_create(self, cls, name, help, labels, **kw):
+        """Return the named family, creating it on first registration;
+        re-registering under a different kind is a TypeError."""
         fam = self._families.get(name)
         if fam is not None:
             if not isinstance(fam, cls):
@@ -196,22 +211,27 @@ class MetricsRegistry:
 
     def counter(self, name: str, help: str = "",
                 labels: Sequence[str] = ()) -> Counter:
+        """Get-or-create a Counter family."""
         return self._get_or_create(Counter, name, help, labels)
 
     def gauge(self, name: str, help: str = "",
               labels: Sequence[str] = ()) -> Gauge:
+        """Get-or-create a Gauge family."""
         return self._get_or_create(Gauge, name, help, labels)
 
     def histogram(self, name: str, help: str = "",
                   labels: Sequence[str] = (),
                   buckets: Optional[Sequence[float]] = None) -> Histogram:
+        """Get-or-create a Histogram family (default time buckets)."""
         return self._get_or_create(Histogram, name, help, labels,
                                    buckets=buckets)
 
     def get(self, name: str):
+        """The named family, or None."""
         return self._families.get(name)
 
     def names(self) -> list:
+        """Family names in registration order."""
         return list(self._families)
 
     # ------------------------------------------------------------ export
@@ -267,6 +287,7 @@ class MetricsRegistry:
 
 
 def _fmt(v: float) -> str:
+    """Prometheus-safe number formatting (ints bare, +/-Inf named)."""
     if v == math.inf:
         return "+Inf"
     if v == -math.inf:
@@ -276,13 +297,16 @@ def _fmt(v: float) -> str:
 
 
 def _label_str(names, key) -> str:
+    """Render a label set as name="value" pairs."""
     return ",".join(f'{n}="{v}"' for n, v in zip(names, key))
 
 
 def _wrap(base: str) -> str:
+    """Brace a label string, or nothing when unlabeled."""
     return f"{{{base}}}" if base else ""
 
 
 def _merge(base: str, extra: str) -> str:
+    """Brace a label string with one extra pair appended (``le=``)."""
     extra = extra.replace("'", '"')
     return f"{{{base},{extra}}}" if base else f"{{{extra}}}"

@@ -1,0 +1,141 @@
+"""Docs smoke gate: links resolve, CLI examples actually run.
+
+    python tools/docs_smoke.py [--no-exec]
+
+Two checks over README.md + docs/*.md:
+
+1. **Link check** — every relative markdown link (``[x](docs/cli.md)``,
+   ``[y](metrics.md#anchor)``) must point at a file that exists, and a
+   ``#fragment`` must match a heading in the target (GitHub anchor
+   slugging: lowercase, spaces to dashes, punctuation dropped).
+2. **Example execution** — every fenced block in docs/cli.md whose info
+   string is exactly ``bash`` runs under ``bash -e`` with PYTHONPATH=src
+   from the repo root; nonzero exit fails the gate.  Blocks tagged
+   ``bash skip-smoke`` are rendered as bash but skipped (documented
+   invocations too heavy for CI).
+
+Stdlib-only on purpose: the CI job runs it before installing anything
+beyond the test requirements.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC_FILES = ["README.md", "docs/architecture.md", "docs/metrics.md",
+             "docs/cli.md"]
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(.*)$")
+
+
+def _anchors(path: str) -> set:
+    """GitHub-style anchor slugs for every heading in a markdown file."""
+    out = set()
+    in_fence = False
+    with open(path) as fh:
+        for line in fh:
+            if line.startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence or not line.startswith("#"):
+                continue
+            text = line.lstrip("#").strip()
+            slug = re.sub(r"[^\w\- ]", "", text.lower())
+            out.add(re.sub(r" +", "-", slug).strip("-"))
+    return out
+
+
+def check_links() -> list:
+    """Resolve every relative link + fragment; return failure strings."""
+    bad = []
+    for doc in DOC_FILES:
+        src = os.path.join(ROOT, doc)
+        base = os.path.dirname(src)
+        in_fence = False
+        for lineno, line in enumerate(open(src), 1):
+            if line.startswith("```"):
+                in_fence = not in_fence
+            if in_fence:
+                continue
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                path, _, frag = target.partition("#")
+                dest = os.path.normpath(os.path.join(base, path)) \
+                    if path else src
+                if not os.path.exists(dest):
+                    bad.append(f"{doc}:{lineno}: broken link -> {target}")
+                    continue
+                if frag and dest.endswith(".md") and \
+                        frag not in _anchors(dest):
+                    bad.append(f"{doc}:{lineno}: missing anchor "
+                               f"#{frag} in {path or doc}")
+    return bad
+
+
+def bash_blocks(path: str) -> list:
+    """(start_line, info, script) for each fenced block in ``path``."""
+    blocks, info, buf, start = [], None, [], 0
+    for lineno, line in enumerate(open(path), 1):
+        m = FENCE_RE.match(line)
+        if m and info is None:
+            info, buf, start = m.group(1).strip(), [], lineno
+        elif m:
+            blocks.append((start, info, "".join(buf)))
+            info = None
+        elif info is not None:
+            buf.append(line)
+    return blocks
+
+
+def run_examples() -> list:
+    """Execute the ``bash``-tagged docs/cli.md blocks; return failures."""
+    path = os.path.join(ROOT, "docs", "cli.md")
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    bad = []
+    ran = 0
+    for start, info, script in bash_blocks(path):
+        if info != "bash":
+            if info.startswith("bash"):
+                print(f"docs/cli.md:{start}: skipped ({info})")
+            continue
+        ran += 1
+        t0 = time.time()
+        proc = subprocess.run(["bash", "-e"], input=script, text=True,
+                              cwd=ROOT, env=env,
+                              stdout=subprocess.PIPE,
+                              stderr=subprocess.STDOUT)
+        status = "ok" if proc.returncode == 0 else \
+            f"FAILED (exit {proc.returncode})"
+        print(f"docs/cli.md:{start}: {status} in {time.time() - t0:.0f}s")
+        if proc.returncode != 0:
+            tail = "\n".join(proc.stdout.splitlines()[-15:])
+            bad.append(f"docs/cli.md:{start}: exit {proc.returncode}\n"
+                       f"{tail}")
+    print(f"executed {ran} example blocks")
+    return bad
+
+
+def main() -> int:
+    """Run both checks; print failures; return a shell exit code."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-exec", action="store_true",
+                    help="link-check only (skip running cli.md examples)")
+    args = ap.parse_args()
+    bad = check_links()
+    print(f"link check: {len(bad)} problems across {len(DOC_FILES)} files")
+    if not args.no_exec:
+        bad += run_examples()
+    for b in bad:
+        print(b)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,130 @@
+"""Request-tracing overhead gate + blame-attribution sanity check.
+
+Part one serves the same closed workload with the request tracer off and
+on (everything else identical, monitor/spans disabled so only the tracer
+is priced) and gates the traced decode-step median at <5% over untraced
+— lifecycle stamping rides the decode hot path, so its budget is part of
+the tracing contract.  Part two drains the router bench's Poisson
+chatbot workload through a single traced replica and asserts the
+critical-path analyzer (a) conserves every request's E2E and (b) names a
+dominant blame segment for the p99-TTFT tail — the triage headline
+("p99 TTFT violators: NN% <segment> at replicas=1") the acceptance
+criteria pin.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import FAST, csv_row
+from repro.configs import get_config, reduced
+from repro.inference.engine import Request, ServeEngine
+from repro.inference.fleet import ReplicaFleet
+from repro.inference.router import RequestRouter
+from repro.models import init_params
+from repro.telemetry.critical_path import SEGMENTS, analyze
+from repro.telemetry.tracing import RequestTracer
+from repro.workload import sample_requests
+
+ARCH = "smollm-360m"
+MAX_LEN = 64
+ROUNDS = 3 if FAST else 5
+OVERHEAD_GATE = 1.05          # traced median <= 1.05x untraced median
+
+
+def _requests(cfg, n=4, max_new=8):
+    rng = np.random.default_rng(0)
+    return [Request(i, prompt=list(rng.integers(0, cfg.vocab_size, 12)),
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+def _engine(cfg, params, *, traced: bool) -> ServeEngine:
+    tracer = RequestTracer() if traced else None
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=MAX_LEN,
+                      plan="eager", monitor=False, telemetry=None,
+                      tracer=tracer)
+    eng.run(_requests(cfg))            # warmup: pay jit once
+    if tracer is not None:
+        tracer.clear()
+    return eng
+
+
+def _median(xs: list) -> float:
+    xs = sorted(xs)
+    return xs[len(xs) // 2] if xs else 0.0
+
+
+def _measure_pair(cfg, params) -> tuple:
+    """Median decode-step time (untraced, traced), rounds INTERLEAVED so
+    background load drift hits both measurement pools equally."""
+    eng_off = _engine(cfg, params, traced=False)
+    eng_on = _engine(cfg, params, traced=True)
+    off_steps, on_steps = [], []
+    for _ in range(ROUNDS):
+        for eng, pool in ((eng_off, off_steps), (eng_on, on_steps)):
+            eng.reset()
+            if eng.tracer is not None:
+                eng.tracer.clear()     # reset() keeps the shared tracer
+            eng.run(_requests(cfg))
+            pool.extend(eng.stats.step_times_s)
+    return _median(off_steps), _median(on_steps)
+
+
+def _tail_blame_row(cfg, params) -> str:
+    """The router bench's Poisson chatbot drain at replicas=1, traced:
+    the analyzer must conserve every request and name a dominant blame
+    segment for the p99-TTFT tail."""
+    wl = sample_requests("chatbot", 8 if FAST else 12, seed=0,
+                         vocab_size=cfg.vocab_size, prompt_cap=12,
+                         output_cap=6, time_scale=100.0)
+    tracer = RequestTracer()
+    fleet = ReplicaFleet(cfg, params, replicas=1, max_batch=2,
+                         max_len=MAX_LEN, plan="eager", monitor=False,
+                         tracer=tracer)
+    router = RequestRouter(fleet, policy="least-queue-depth",
+                           tracer=tracer)
+    router.route([Request(w.rid, prompt=list(w.prompt),
+                          max_new_tokens=w.max_new_tokens,
+                          arrival_s=w.arrival_s) for w in wl.requests])
+    analysis = analyze(tracer)
+    if not analysis.conservation_ok:
+        raise RuntimeError(
+            "conservation invariant violated in the blame scenario: "
+            "max error "
+            f"{max(b.conservation_error for b in analysis.breakdowns)}s")
+    tail = analysis.tail_blame(99.0)
+    dom = tail["dominant"]
+    if dom not in SEGMENTS or tail["share"].get(dom, 0.0) <= 0.0:
+        raise RuntimeError(
+            f"p99 TTFT tail has no nameable blame segment: {tail!r}")
+    return csv_row("tracing/p99_ttft_blame", tail["threshold_s"] * 1e6,
+                   f"dominant={dom};share={tail['share'][dom]:.3f};"
+                   f"tail_n={tail['n']};replicas=1")
+
+
+def run() -> list[str]:
+    rows = []
+    cfg = reduced(get_config(ARCH), n_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    t_off, t_on = _measure_pair(cfg, params)
+    ratio = t_on / t_off if t_off > 0 else 0.0
+    if ratio > OVERHEAD_GATE:
+        # one noise retry before declaring a regression: ms-scale CPU
+        # step times jitter by a few percent run to run
+        t_off, t_on = _measure_pair(cfg, params)
+        ratio = t_on / t_off if t_off > 0 else 0.0
+    verdict = "ok" if ratio <= OVERHEAD_GATE else "OVER_BUDGET"
+    rows.append(csv_row("tracing/decode_step_untraced", t_off * 1e6,
+                        "tracer=off"))
+    rows.append(csv_row("tracing/decode_step_traced", t_on * 1e6,
+                        f"tracer=on;overhead={ratio:.3f}x;"
+                        f"gate={OVERHEAD_GATE}x;{verdict}"))
+    if ratio > OVERHEAD_GATE:
+        raise RuntimeError(
+            f"tracing overhead {ratio:.3f}x exceeds the "
+            f"{OVERHEAD_GATE}x decode-step budget "
+            f"(traced {t_on * 1e6:.1f}us vs untraced {t_off * 1e6:.1f}us)")
+
+    rows.append(_tail_blame_row(cfg, params))
+    return rows

@@ -40,6 +40,7 @@ BENCHES = [
     ("speculative_decode", "benchmarks.bench_speculative_decode"),
     ("observability", "benchmarks.bench_observability"),  # telemetry gate
     ("router", "benchmarks.bench_router"),                # replica fleet
+    ("tracing", "benchmarks.bench_tracing"),              # request tracing
 ]
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines.json")

@@ -311,7 +311,8 @@ class ServeEngine:
                  prefill_chunk: Optional[int] = None,
                  speculative: bool = False, draft_config=None,
                  draft_params=None, spec_k: int = 4,
-                 spec_inflection: Optional[int] = None, monitor=True):
+                 spec_inflection: Optional[int] = None, monitor=True,
+                 tracer=None):
         if plan not in PLAN_STRATEGIES:
             raise ValueError(f"unknown plan {plan!r}; "
                              f"expected one of {PLAN_STRATEGIES}")
@@ -455,6 +456,11 @@ class ServeEngine:
         self.plan = plan
         self.platform = platform
         self.telemetry = telemetry          # Optional[SpanRecorder]
+        # request-scoped lifecycle tracer (Optional[RequestTracer]); a
+        # fleet shares ONE instance across replicas so a trace follows
+        # its request through re-queue and re-dispatch — reset() leaves
+        # it alone for the same reason
+        self.tracer = tracer
         # live boundedness monitor: True -> create one, False/None -> off,
         # or pass a BoundednessMonitor instance to share across engines
         if monitor is True:
@@ -610,6 +616,8 @@ class ServeEngine:
             self.stats.rejected += 1
             self.timings.setdefault(
                 req.rid, RequestTiming(req.rid, arrival_s=req.arrival_s))
+            if self.tracer is not None:
+                self.tracer.reject(req.rid, self.now)
             return True
         if self.cache_mode == "paged":
             return self._admit_paged(req)
@@ -632,11 +640,19 @@ class ServeEngine:
         self.stats.prefills += 1
         self.stats.tokens_out += 1
         timing = self._note_first_token(req)
+        if self.tracer is not None:
+            self.tracer.admit(req.rid, t_begin)
+            self.tracer.prefill(req.rid, t_begin, self.now,
+                                tax_s=acct.host_time_s)
+            self.tracer.first_token(req.rid, self.now)
         if len(req.generated) >= req.max_new_tokens:
             # single-token budget: done at prefill, never occupies a slot
             req.done = True
             req.status = "done"
             timing.done_s = self.now
+            if self.tracer is not None:
+                self.tracer.done(req.rid, self.now,
+                                 n_tokens=len(req.generated))
         else:
             req.status = "active"
             self.slots[slot] = req
@@ -679,6 +695,8 @@ class ServeEngine:
         self.lengths[slot] = 0
         self._prefill_tasks[slot] = _PrefillTask(
             req=req, slot=slot, toks=toks, replay=replay)
+        if self.tracer is not None:
+            self.tracer.admit(req.rid, self.now, resume=resume is not None)
         return True
 
     def _restore_from_host(self, req: Request, slot: int,
@@ -701,6 +719,9 @@ class ServeEngine:
         self._admit_seq += 1
         self.slots[slot] = req
         self.lengths[slot] = entries
+        if self.tracer is not None:
+            self.tracer.admit(req.rid, self.now, resume=True,
+                              restore_bytes=nbytes, restore_tax_s=tax)
         if self.speculative:
             # the TARGET KV came back byte-exact from host memory, but the
             # draft cache was discarded at preemption: rebuild it from the
@@ -734,6 +755,7 @@ class ServeEngine:
         entries = int(self.lengths[slot])
         ids = self.kv.pool.owned(req.rid)
         mid_prefill = self._prefill_tasks.pop(slot, None) is not None
+        nbytes, tax = 0, 0.0
         if self.offload_tier is not None and not mid_prefill:
             host = self.kv.gather_host(self.cache, ids)
             nbytes, tax = self.offload_tier.evict(req.rid, host, len(ids))
@@ -743,6 +765,9 @@ class ServeEngine:
             req._resume = ("host", entries)
         else:
             req._resume = ("recompute", None)
+        if self.tracer is not None:
+            self.tracer.preempt(req.rid, self.now, mode=req._resume[0],
+                                offload_bytes=nbytes, offload_tax_s=tax)
         freed = self.kv.pool.free(req.rid)
         self.cache = self.kv.zero_pages(self.cache, freed)
         self.slots[slot] = None
@@ -793,6 +818,10 @@ class ServeEngine:
         dt = time.perf_counter() - t_start
         t_begin = self.now
         self.now += dt
+        if self.tracer is not None:
+            self.tracer.prefill(task.req.rid, t_begin, self.now,
+                                tax_s=acct.host_time_s, replay=task.replay,
+                                chunk=chunk_len)
         if self.telemetry is not None:
             self.telemetry.add(f"prefill_chunk[{chunk_len}]", "prefill",
                                t_begin, self.now, rid=task.req.rid,
@@ -814,11 +843,16 @@ class ServeEngine:
         self.stats.prefills += 1
         self.stats.tokens_out += 1
         timing = self._note_first_token(req)
+        if self.tracer is not None:
+            self.tracer.first_token(req.rid, self.now)
         if len(req.generated) >= req.max_new_tokens:
             req.done = True
             req.status = "done"
             timing.done_s = self.now
             self._release_slot(slot, req)
+            if self.tracer is not None:
+                self.tracer.done(req.rid, self.now,
+                                 n_tokens=len(req.generated))
         elif self.speculative:
             self._draft_prefill_slot(slot, task.toks)
 
@@ -888,6 +922,11 @@ class ServeEngine:
         self.now += dt
         self.stats.step_times_s.append(dt)
         self._note_step(len(active), dt, acct)
+        if self.tracer is not None:
+            self.tracer.decode([self.slots[i].rid for i in active],
+                               t_begin, self.now, tax_s=acct.host_time_s,
+                               batch=len(active),
+                               modeled_tklqt_s=acct.modeled_tklqt_s)
         if self.telemetry is not None:
             self.telemetry.add(f"decode[b={len(active)}]", "decode",
                                t_begin, self.now, batch=len(active))
@@ -907,6 +946,9 @@ class ServeEngine:
                 if timing is not None:
                     timing.done_s = self.now
                 self._release_slot(i, req)
+                if self.tracer is not None:
+                    self.tracer.done(req.rid, self.now,
+                                     n_tokens=len(req.generated))
         return True
 
     # ------------------------------------------------------------ speculative
@@ -1025,6 +1067,12 @@ class ServeEngine:
         if paged:
             self.stats.block_pool_utilization.append(
                 self.kv.pool.utilization)
+        if self.tracer is not None:
+            # one interval covering the whole draft-propose + verify round
+            self.tracer.decode([self.slots[i].rid for i in active],
+                               t_begin, self.now, tax_s=acct.host_time_s,
+                               batch=len(active),
+                               modeled_tklqt_s=acct.modeled_tklqt_s)
         if self.telemetry is not None:
             self.telemetry.add(f"spec_verify[b={len(active)},k={k}]",
                                "decode", t_begin, self.now,
@@ -1062,6 +1110,9 @@ class ServeEngine:
                 req.status = "done"
                 if timing is not None:
                     timing.done_s = self.now
+                if self.tracer is not None:
+                    self.tracer.done(req.rid, self.now,
+                                     n_tokens=len(req.generated))
                 if paged:
                     self._release_slot(i, req)
                 else:
@@ -1112,6 +1163,11 @@ class ServeEngine:
         self.now += dt
         self.stats.step_times_s.append(dt)
         self._note_step(len(active), dt, acct)
+        if self.tracer is not None:
+            self.tracer.decode([self.slots[i].rid for i in active],
+                               t_begin, self.now, tax_s=acct.host_time_s,
+                               batch=len(active),
+                               modeled_tklqt_s=acct.modeled_tklqt_s)
         if self.telemetry is not None:
             self.telemetry.add(f"decode[b={len(active)}]", "decode",
                                t_begin, self.now, batch=len(active))
@@ -1132,6 +1188,9 @@ class ServeEngine:
                 self.lengths[i] = 0
                 if timing is not None:
                     timing.done_s = self.now
+                if self.tracer is not None:
+                    self.tracer.done(req.rid, self.now,
+                                     n_tokens=len(req.generated))
 
     # ------------------------------------------------------------ run loop
     def submit(self, req: Request) -> None:
@@ -1142,6 +1201,10 @@ class ServeEngine:
         This is the entry point an external router uses to feed a replica
         incrementally — ``run()`` is submit-everything-then-drain.
         """
+        if self.tracer is not None:
+            # idempotent: a router-fed replica already minted this trace
+            # at fleet ingress; engine-only runs mint it here
+            self.tracer.ingress(req.rid, req.arrival_s)
         self._pending.append(req)
         # stable sort: equal arrival times keep submission order, so a
         # router-fed replica admits exactly like run() over the same list

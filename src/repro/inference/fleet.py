@@ -197,6 +197,15 @@ class ReplicaFleet:
         # lifecycle + router families recorded live in self.registry
         snap = self.registry.snapshot()
         for name, fam in snap.items():
+            if fam["type"] == "histogram":
+                f = agg.histogram(name, fam["help"],
+                                  labels=tuple(fam["label_names"]),
+                                  buckets=tuple(fam["buckets"]))
+                for s in fam["series"]:
+                    v = s["value"]
+                    f.merge_series(v["count"], v["sum"], v["buckets"],
+                                   **s["labels"])
+                continue
             dst = {"counter": agg.counter, "gauge": agg.gauge}.get(
                 fam["type"])
             if dst is None:

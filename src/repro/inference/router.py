@@ -161,11 +161,14 @@ class RequestRouter:
     """
 
     def __init__(self, fleet: ReplicaFleet, policy="least-queue-depth",
-                 on_token=None):
+                 on_token=None, tracer=None):
         self.fleet = fleet
         self.policy = (make_policy(policy) if isinstance(policy, str)
                        else policy)
         self.on_token = on_token        # callable(TokenEvent) or None
+        # request-scoped lifecycle tracer; pass the SAME instance to the
+        # fleet (engine_kwargs tracer=) so traces span router + replicas
+        self.tracer = tracer
         self.clock = 0.0                # router virtual time (monotonic)
         reg = fleet.registry
         self._g_queue = reg.gauge(
@@ -184,6 +187,10 @@ class RequestRouter:
             "router_token_events_total", "tokens streamed through on_token")
         self._c_completed = reg.counter(
             "router_completed_total", "requests finished fleet-wide")
+        self._h_queue_wait = reg.histogram(
+            "router_queue_wait_seconds",
+            "per-request ingress-queue wait: arrival to policy dispatch",
+            labels=("replica",))
         self._queue: deque = deque()
         self._emitted: dict[int, int] = {}   # rid -> tokens streamed
         self._watch: dict[int, Replica] = {}  # rid -> emitting replica
@@ -219,11 +226,15 @@ class RequestRouter:
                 "router has queued traffic but no serving replica; "
                 "add_replica() before draining the fleet")
         rep = self.policy.choose(req, serving)
+        if self.tracer is not None:
+            self.tracer.dispatch(req.rid, self.clock, replica=rep.rid)
         rep.engine.submit(req)
         rep.requests.append(req)
         rep.dispatched += 1
         self._watch[req.rid] = rep
         self._c_dispatch.inc(replica=rep.rid, policy=self.policy.name)
+        self._h_queue_wait.observe(max(0.0, self.clock - req.arrival_s),
+                                   replica=rep.rid)
         if self._report is not None:
             self._report.assignment[req.rid] = rep.rid
             self._report.dispatches += 1
@@ -273,6 +284,9 @@ class RequestRouter:
             self.clock = max(self.clock, self._frontier())
             while i < len(arrivals) and \
                     arrivals[i].arrival_s <= self.clock:
+                if self.tracer is not None:
+                    self.tracer.ingress(arrivals[i].rid,
+                                        arrivals[i].arrival_s)
                 self._queue.append(arrivals[i])
                 i += 1
             busy = self.fleet.busy()

@@ -27,6 +27,7 @@ import time
 
 import jax
 
+from repro.core.export import save_request_trace
 from repro.core.fusion import json_sanitize
 from repro.inference.engine import (CACHE_MODES, PLAN_STRATEGIES, Request,
                                     ServeEngine)
@@ -34,8 +35,11 @@ from repro.inference.fleet import ReplicaFleet
 from repro.inference.router import POLICIES, RequestRouter
 from repro.configs import get_config, reduced
 from repro.models import init_params
+from repro.telemetry.critical_path import (SLO, analyze, record_goodput,
+                                           triage)
 from repro.telemetry.metrics import percentile
-from repro.workload import list_scenarios, sample_requests
+from repro.telemetry.tracing import RequestTracer
+from repro.workload import get_scenario, list_scenarios, sample_requests
 
 
 def build_requests(wl) -> list:
@@ -131,6 +135,17 @@ def main():
     ap.add_argument("--metrics-out", default=None,
                     help="write the fleet metrics snapshot (aggregated "
                          "families + per-replica registries) as JSON")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the per-request critical-path trace "
+                         "(Perfetto/chrome JSON, one track per request)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="TTFT SLO in ms for goodput accounting "
+                         "(default: the scenario's registered SLO; "
+                         "0 disables)")
+    ap.add_argument("--slo-itl-ms", type=float, default=None,
+                    help="mean-ITL SLO in ms for goodput accounting "
+                         "(default: the scenario's registered SLO; "
+                         "0 disables)")
     args = ap.parse_args()
     if args.replicas < 1:
         ap.error(f"--replicas must be >= 1, got {args.replicas}")
@@ -161,8 +176,13 @@ def main():
         warm = ServeEngine(cfg, params, tp=args.tp, **engine_kwargs)
         warm.run(build_requests(wl)[:min(2, args.requests)])
 
+    # one tracer shared by the router and every replica engine: lifecycle
+    # events land on one timeline per request regardless of which replica
+    # served (or re-served) it — the warmup engine above never sees it
+    tracer = RequestTracer()
     fleet = ReplicaFleet(cfg, params, replicas=args.replicas, tp=args.tp,
-                         validate_mesh=args.validate_mesh, **engine_kwargs)
+                         validate_mesh=args.validate_mesh, tracer=tracer,
+                         **engine_kwargs)
 
     def emit(ev):
         print(json.dumps({"stream": {"rid": ev.rid, "replica": ev.replica,
@@ -170,7 +190,8 @@ def main():
                                      "t": round(ev.t, 6)}}))
 
     router = RequestRouter(fleet, policy=args.policy,
-                           on_token=emit if args.stream else None)
+                           on_token=emit if args.stream else None,
+                           tracer=tracer)
     actions = []
     if args.remove_at is not None:
         actions.append((args.remove_at,
@@ -184,6 +205,23 @@ def main():
 
     out = {"arch": cfg.name, "scenario": args.scenario, "tp": args.tp}
     out.update(fleet_report(router, report, fleet, wall))
+
+    # critical-path decomposition + SLO/goodput accounting.  Goodput
+    # families land in the fleet registry BEFORE the snapshot writes, so
+    # --metrics-out carries them alongside the router/queue-wait series.
+    slo = SLO.resolve(get_scenario(args.scenario),
+                      args.slo_ttft_ms, args.slo_itl_ms)
+    analysis = analyze(tracer)
+    tri = triage(analysis, slo)
+    if "slo_report" in tri:
+        record_goodput(fleet.registry, tri["slo_report"])
+    out["triage"] = tri
+    if args.trace_out:
+        save_request_trace(analysis, args.trace_out,
+                           platform=args.platform,
+                           metadata={"scenario": args.scenario,
+                                     "policy": args.policy})
+        out["trace_out"] = args.trace_out
     if args.metrics_out:
         with open(args.metrics_out, "w") as fh:
             json.dump(json_sanitize(fleet.snapshot()), fh, indent=2,

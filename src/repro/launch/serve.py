@@ -43,11 +43,15 @@ import jax
 import numpy as np
 
 from repro.core.device_model import PLATFORMS
+from repro.core.export import save_request_trace
 from repro.core.fusion import json_sanitize
 from repro.inference.engine import (CACHE_MODES, OFFLOAD_MODES,
                                     PLAN_STRATEGIES, Request, ServeEngine)
 from repro.configs import get_config, reduced
 from repro.models import init_params
+from repro.telemetry.critical_path import (SLO, analyze, record_goodput,
+                                           triage)
+from repro.telemetry.tracing import RequestTracer
 
 
 def main():
@@ -100,6 +104,15 @@ def main():
                          "the measured run: Prometheus text exposition "
                          "when the path ends in .prom, else a JSON "
                          "snapshot")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the per-request critical-path trace "
+                         "(Perfetto/chrome JSON, one track per request)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="TTFT SLO in ms for goodput accounting "
+                         "(0 disables; unset = no TTFT bound)")
+    ap.add_argument("--slo-itl-ms", type=float, default=None,
+                    help="mean-ITL SLO in ms for goodput accounting "
+                         "(0 disables; unset = no ITL bound)")
     ap.add_argument("--attribution", action="store_true",
                     help="include the per-operator launch/queue/exec "
                          "attribution of one decode step plus the live "
@@ -145,7 +158,9 @@ def main():
         except ValueError as e:
             ap.error(str(e))
     params = init_params(jax.random.PRNGKey(0), cfg)
+    tracer = RequestTracer()
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
+                      tracer=tracer,
                       max_len=args.max_len, plan=args.plan,
                       platform=args.platform, plan_table=args.plan_table,
                       tp=args.tp,
@@ -167,6 +182,9 @@ def main():
         # tax and TTFT/ITL are steady-state serving, not compile time
         eng.run(make_requests())
         eng.reset()
+        # reset() keeps the (shareable) tracer; drop warmup lifecycles so
+        # the triage decomposition covers the measured run only
+        tracer.clear()
     reqs = make_requests()
     t0 = time.time()
     done = eng.run(reqs)
@@ -244,6 +262,20 @@ def main():
         }
         report["boundedness"] = (eng.monitor.summary()
                                  if eng.monitor is not None else None)
+    # critical-path decomposition + goodput BEFORE the registry export,
+    # so --metrics-out snapshots carry the goodput families
+    slo = SLO.resolve(None, args.slo_ttft_ms, args.slo_itl_ms)
+    analysis = analyze(tracer)
+    tri = triage(analysis, slo)
+    if "slo_report" in tri:
+        record_goodput(eng.registry, tri["slo_report"])
+    report["triage"] = tri
+    if args.trace_out:
+        save_request_trace(
+            analysis, args.trace_out, platform=args.platform,
+            host_spans=(eng.telemetry.spans
+                        if eng.telemetry is not None else ()))
+        report["trace_out"] = args.trace_out
     if args.metrics_out:
         if args.metrics_out.endswith(".prom"):
             with open(args.metrics_out, "w") as fh:

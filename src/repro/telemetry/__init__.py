@@ -9,6 +9,10 @@ from repro.telemetry.attribution import (  # noqa: F401
     AttributionReport, OperatorRow, OpTag, attribute_events, merge_report,
     parse_operator, segment_ops,
 )
+from repro.telemetry.critical_path import (  # noqa: F401
+    SEGMENTS, SLO, CriticalPathAnalysis, RequestBreakdown, analyze,
+    record_goodput, slo_report, triage,
+)
 from repro.telemetry.metrics import (  # noqa: F401
     LatencySummary, RequestTiming, percentile, percentiles, summarize,
 )
@@ -16,6 +20,9 @@ from repro.telemetry.registry import (  # noqa: F401
     Counter, Gauge, Histogram, MetricsRegistry, exponential_buckets,
 )
 from repro.telemetry.spans import Span, SpanRecorder  # noqa: F401
+from repro.telemetry.tracing import (  # noqa: F401
+    RequestTrace, RequestTracer, TraceEvent,
+)
 
 _LAZY = ("CharacterizationResult", "MeasuredPoint", "TPSweepPoint",
          "characterize", "classify_measured_sweep", "memory_pressure_sweep",

@@ -177,6 +177,26 @@ class Histogram(_Family):
                         else math.inf)
         return math.inf
 
+    def merge_series(self, count: int, sum: float, buckets,
+                     **labels) -> None:
+        """Fold an already-bucketed series (another registry's snapshot
+        of a same-bounds family) into the labeled series — the fleet
+        aggregation path, where re-observing raw values is impossible."""
+        if len(buckets) != len(self.bounds) + 1:
+            raise ValueError(
+                f"histogram {self.name!r} has {len(self.bounds) + 1} "
+                f"buckets (incl. overflow), got {len(buckets)}")
+        key = self._key(labels)
+        counts = self._counts.get(key)
+        if counts is None:
+            counts = self._counts[key] = [0] * (len(self.bounds) + 1)
+            self._sums[key] = 0.0
+            self._totals[key] = 0
+        for i, c in enumerate(buckets):
+            counts[i] += c
+        self._sums[key] += sum
+        self._totals[key] += count
+
     def series(self) -> dict:
         """All series as {key: {count, sum, buckets}}."""
         out = {}
@@ -269,13 +289,12 @@ class MetricsRegistry:
                     cum = 0
                     for b, c in zip(fam.bounds, s["buckets"]):
                         cum += c
-                        le = _fmt(b)
                         lines.append(
-                            f"{name}_bucket{_merge(base, f'le={le!r}')} "
+                            f"{name}_bucket{_merge(base, _fmt(b))} "
                             f"{cum}")
                     cum += s["buckets"][-1]
                     lines.append(
-                        f"{name}_bucket{_merge(base, 'le=' + repr('+Inf'))}"
+                        f"{name}_bucket{_merge(base, '+Inf')}"
                         f" {cum}")
                     lines.append(f"{name}_sum{_wrap(base)} {_fmt(s['sum'])}")
                     lines.append(f"{name}_count{_wrap(base)} {s['count']}")
@@ -296,9 +315,19 @@ def _fmt(v: float) -> str:
     return repr(int(f)) if f.is_integer() else repr(f)
 
 
+def _escape_label_value(v: str) -> str:
+    """Escape a label value per the Prometheus text-exposition spec:
+    backslash, double-quote, and newline must be backslash-escaped
+    (order matters — backslash first, or the others double-escape)."""
+    return (v.replace("\\", "\\\\")
+             .replace('"', '\\"')
+             .replace("\n", "\\n"))
+
+
 def _label_str(names, key) -> str:
-    """Render a label set as name="value" pairs."""
-    return ",".join(f'{n}="{v}"' for n, v in zip(names, key))
+    """Render a label set as name="value" pairs (values escaped)."""
+    return ",".join(f'{n}="{_escape_label_value(v)}"'
+                    for n, v in zip(names, key))
 
 
 def _wrap(base: str) -> str:
@@ -306,7 +335,7 @@ def _wrap(base: str) -> str:
     return f"{{{base}}}" if base else ""
 
 
-def _merge(base: str, extra: str) -> str:
-    """Brace a label string with one extra pair appended (``le=``)."""
-    extra = extra.replace("'", '"')
+def _merge(base: str, le_value: str) -> str:
+    """Brace a label string with the histogram ``le=`` pair appended."""
+    extra = f'le="{_escape_label_value(le_value)}"'
     return f"{{{base},{extra}}}" if base else f"{{{extra}}}"

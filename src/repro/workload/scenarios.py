@@ -54,6 +54,10 @@ class Scenario:
     rate_rps: float = 0.0           # poisson/bursty mean arrival rate
     burst_s: float = 0.0            # bursty: length of an on-phase
     idle_s: float = 0.0             # bursty: silence between bursts
+    # default latency SLOs for goodput accounting (None = unconstrained);
+    # CLI --slo-ttft-ms/--slo-itl-ms override per run
+    slo_ttft_s: Optional[float] = None
+    slo_itl_s: Optional[float] = None
 
     def __post_init__(self):
         if self.arrival not in ARRIVALS:
@@ -100,6 +104,7 @@ register_scenario(Scenario(
     arrival="poisson", rate_rps=4.0,
     prompt=LengthDist("lognormal", lo=8, hi=64, sigma=0.4),
     output=LengthDist("lognormal", lo=8, hi=48, sigma=0.4),
+    slo_ttft_s=0.2, slo_itl_s=0.05,
 ))
 register_scenario(Scenario(
     name="code-completion",
@@ -108,6 +113,7 @@ register_scenario(Scenario(
     arrival="closed",
     prompt=LengthDist("lognormal", lo=24, hi=128, sigma=0.3),
     output=LengthDist("uniform", lo=4, hi=16),
+    slo_ttft_s=0.5, slo_itl_s=0.05,
 ))
 register_scenario(Scenario(
     name="summarization",
@@ -116,6 +122,7 @@ register_scenario(Scenario(
     arrival="closed",
     prompt=LengthDist("uniform", lo=96, hi=256),
     output=LengthDist("uniform", lo=4, hi=12),
+    slo_ttft_s=2.0, slo_itl_s=0.1,
 ))
 register_scenario(Scenario(
     name="agentic",
@@ -124,4 +131,5 @@ register_scenario(Scenario(
     arrival="bursty", rate_rps=8.0, burst_s=1.0, idle_s=3.0,
     prompt=LengthDist("uniform", lo=8, hi=32),
     output=LengthDist("uniform", lo=4, hi=12),
+    slo_ttft_s=0.3, slo_itl_s=0.05,
 ))

@@ -1,0 +1,417 @@
+"""Request-scoped tracing: lifecycle event collection, critical-path
+decomposition with the conservation invariant (eager, fused, and
+paged-with-preemption runs), SLO/goodput accounting and its registry
+families, Perfetto round-trip of request tracks (strict JSON, per-request
+tracks, paired flows), the router queue-wait histogram + fleet histogram
+aggregation, and the Prometheus label-escaping regression."""
+import json
+
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.export import REQUEST_PID, request_trace, save_request_trace
+from repro.inference.engine import Request, ServeEngine
+from repro.inference.fleet import ReplicaFleet
+from repro.inference.router import RequestRouter
+from repro.models import init_params
+from repro.telemetry.critical_path import (SEGMENTS, SLO, analyze,
+                                           breakdown, record_goodput,
+                                           slo_report, triage)
+from repro.telemetry.registry import MetricsRegistry
+from repro.telemetry.tracing import RequestTrace, RequestTracer
+from repro.workload import get_scenario
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = reduced(get_config("smollm-360m"), n_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _assert_conserved(analysis):
+    assert analysis.breakdowns, "no completed traces to analyze"
+    for b in analysis.breakdowns:
+        assert b.conserved, (
+            f"rid {b.rid}: segments sum "
+            f"{sum(b.segments.values())} != e2e {b.e2e_s} "
+            f"(err {b.conservation_error})")
+        # every segment non-negative; pieces tile [arrival, done]
+        assert all(v >= 0 for v in b.segments.values())
+        if b.pieces:
+            assert b.pieces[0][1] == pytest.approx(b.arrival_s)
+            assert b.pieces[-1][2] == pytest.approx(b.done_s)
+            for (_, _, e0), (_, s1, _) in zip(b.pieces, b.pieces[1:]):
+                assert s1 == pytest.approx(e0)
+
+
+# ------------------------------------------------------------ tracer unit
+def test_tracer_ingress_idempotent_first_wins():
+    tr = RequestTracer()
+    t1 = tr.ingress(0, 1.5)
+    t2 = tr.ingress(0, 9.0)          # engine submit after router mint
+    assert t1 is t2 and t1.arrival_s == 1.5
+    assert t1.count("ingress") == 1
+
+
+def test_tracer_decode_fans_out_to_participants():
+    tr = RequestTracer()
+    tr.decode([0, 1, 2], 1.0, 1.1, tax_s=0.01, batch=3)
+    assert len(tr.traces) == 3
+    for rid in (0, 1, 2):
+        ev = tr.traces[rid].first("decode")
+        assert ev.t0 == 1.0 and ev.t1 == pytest.approx(1.1)
+        assert ev.meta["batch"] == 3
+
+
+# ------------------------------------------------------- decomposition unit
+def test_decompose_hand_built_trace_exact_segments():
+    """A synthetic timeline with every lifecycle phase decomposes into
+    exactly the intervals it was built from."""
+    tr = RequestTracer()
+    tr.ingress(7, 0.0)
+    tr.dispatch(7, 1.0, replica=0)            # 0..1  router queue
+    tr.admit(7, 3.0)                          # 1..3  admission wait
+    tr.prefill(7, 3.0, 4.0, tax_s=0.25)       # 3..4  prefill (0.25 tax)
+    tr.first_token(7, 4.0)
+    tr.decode([7], 5.0, 6.0, tax_s=0.1)       # 4..5  interleave, 5..6 decode
+    tr.preempt(7, 6.0, mode="host", offload_tax_s=0.2)
+    tr.admit(7, 8.0, resume=True, restore_tax_s=0.3)   # 6..8 stall (0.5 tax)
+    tr.decode([7], 8.0, 9.0, tax_s=0.0)
+    tr.done(7, 9.0, n_tokens=3)
+    b = breakdown(tr.traces[7])
+    s = b.segments
+    assert s["router_queue_wait"] == pytest.approx(1.0)
+    assert s["admission_wait"] == pytest.approx(2.0)
+    assert s["prefill_exec"] == pytest.approx(0.75)
+    assert s["launch_tax"] == pytest.approx(0.35)
+    assert s["decode_exec"] == pytest.approx(1.9)
+    assert s["interleave_wait"] == pytest.approx(1.0)
+    # 2s stall window: modeled offload(0.2)+restore(0.3) carved out first
+    assert s["offload_restore_tax"] == pytest.approx(0.5)
+    assert s["preemption_stall"] == pytest.approx(1.5)
+    assert b.conserved and b.e2e_s == pytest.approx(9.0)
+    assert b.preemptions == 1 and b.n_tokens == 3
+    # TTFT walk stops at first token: decode/stall never pollute it
+    assert b.ttft_s == pytest.approx(4.0)
+    assert sum(b.ttft_segments.values()) == pytest.approx(4.0)
+    assert b.ttft_segments["decode_exec"] == 0.0
+    assert b.ttft_dominant == "admission_wait"
+    assert b.mean_itl_s == pytest.approx((9.0 - 4.0) / 2)
+
+
+def test_decompose_clamps_router_engine_clock_skew():
+    """A dispatch stamped AFTER the replica's admit (router clock ran
+    ahead) must not break conservation — skew folds into the waits."""
+    tr = RequestTracer()
+    tr.ingress(1, 0.0)
+    tr.dispatch(1, 5.0, replica=0)    # router clock ahead of the engine
+    tr.admit(1, 2.0)
+    tr.prefill(1, 2.0, 3.0, tax_s=0.0)
+    tr.first_token(1, 3.0)
+    tr.done(1, 6.0, n_tokens=2)
+    b = breakdown(tr.traces[1])
+    assert b.conserved and b.e2e_s == pytest.approx(6.0)
+    assert all(v >= 0 for v in b.segments.values())
+
+
+def test_decompose_engine_only_waits_are_admission():
+    tr = RequestTracer()
+    tr.ingress(0, 0.0)               # no router leg at all
+    tr.admit(0, 2.0)
+    tr.prefill(0, 2.0, 3.0)
+    tr.first_token(0, 3.0)
+    tr.done(0, 3.0, n_tokens=1)
+    b = breakdown(tr.traces[0])
+    assert b.segments["admission_wait"] == pytest.approx(2.0)
+    assert b.segments["router_queue_wait"] == 0.0
+    assert b.replica is None
+
+
+# -------------------------------------------------- engine-level invariant
+@pytest.mark.parametrize("plan", ["eager", "fused"])
+def test_conservation_invariant_planned_runs(tiny_setup, plan):
+    """ISSUE acceptance: segments sum to measured E2E on eager and fused
+    contiguous-cache runs."""
+    cfg, params = tiny_setup
+    tracer = RequestTracer()
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64, plan=plan,
+                      monitor=False, tracer=tracer)
+    eng.run([Request(i, prompt=list(range(5, 13)), max_new_tokens=4,
+                     arrival_s=0.002 * i) for i in range(3)])
+    a = analyze(tracer)
+    assert len(a.breakdowns) == 3
+    _assert_conserved(a)
+    for b in a.breakdowns:
+        assert b.n_tokens == 4
+        assert b.segments["prefill_exec"] > 0
+        assert b.segments["decode_exec"] > 0
+
+
+def test_conservation_invariant_paged_with_preemption(tiny_setup):
+    """ISSUE acceptance: the invariant holds under paged serving with
+    real preemption + host offload/restore traffic."""
+    cfg, params = tiny_setup
+    tracer = RequestTracer()
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64, plan="jit",
+                      cache="paged", block_size=4, num_blocks=6,
+                      offload="host", monitor=False, tracer=tracer)
+    eng.run([Request(i, prompt=list(range(1, 10)), max_new_tokens=10)
+             for i in range(3)])
+    a = analyze(tracer)
+    assert len(a.breakdowns) == 3
+    _assert_conserved(a)
+    assert sum(b.preemptions for b in a.breakdowns) > 0
+    assert eng.stats.preemptions == sum(b.preemptions
+                                        for b in a.breakdowns)
+    # modeled offload/restore transfer was carved out of the stalls
+    assert sum(b.segments["offload_restore_tax"]
+               for b in a.breakdowns) > 0
+
+
+def test_rejected_requests_are_separated(tiny_setup):
+    cfg, params = tiny_setup
+    tracer = RequestTracer()
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64,
+                      monitor=False, tracer=tracer)
+    eng.run([Request(0, prompt=list(range(5, 13)), max_new_tokens=4),
+             Request(1, prompt=list(range(5, 13)), max_new_tokens=100)])
+    a = analyze(tracer)
+    assert [b.rid for b in a.breakdowns] == [0]
+    assert a.rejected == [1]
+
+
+# ------------------------------------------------------------ fleet-level
+def test_router_fleet_trace_and_queue_wait_histogram(tiny_setup):
+    """One shared tracer spans router ingress -> replica completion; the
+    queue-wait histogram lands per-replica in the fleet registry and
+    survives aggregate_metrics() (histogram merge)."""
+    cfg, params = tiny_setup
+    tracer = RequestTracer()
+    fleet = ReplicaFleet(cfg, params, replicas=2, max_batch=2, max_len=64,
+                         monitor=False, tracer=tracer)
+    router = RequestRouter(fleet, policy="round-robin", tracer=tracer)
+    n = 6
+    reqs = [Request(i, prompt=list(range(5, 11)), max_new_tokens=3,
+                    arrival_s=0.001 * i) for i in range(n)]
+    report = router.route(reqs)
+    assert len(report.completed) == n
+    a = analyze(tracer)
+    assert len(a.breakdowns) == n
+    _assert_conserved(a)
+    # every request knows which replica served it
+    assert {b.replica for b in a.breakdowns} == {0, 1}
+    for b in a.breakdowns:
+        assert b.replica == report.assignment[b.rid]
+    # queue-wait histogram: one series per replica, one obs per dispatch
+    fam = fleet.registry.get("router_queue_wait_seconds")
+    assert sum(fam.count(replica=r) for r in (0, 1)) == n
+    agg = fleet.aggregate_metrics().snapshot()
+    hist = agg["router_queue_wait_seconds"]
+    assert hist["type"] == "histogram"
+    assert sum(s["value"]["count"] for s in hist["series"]) == n
+    json.dumps(agg, allow_nan=False)
+
+
+def test_histogram_merge_series_roundtrip():
+    src = MetricsRegistry()
+    h = src.histogram("w_seconds", buckets=(0.1, 1.0), labels=("r",))
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v, r=0)
+    snap = src.snapshot()["w_seconds"]
+    dst = MetricsRegistry()
+    h2 = dst.histogram("w_seconds", buckets=tuple(snap["buckets"]),
+                       labels=("r",))
+    s = snap["series"][0]
+    h2.merge_series(s["value"]["count"], s["value"]["sum"],
+                    s["value"]["buckets"], **s["labels"])
+    h2.merge_series(s["value"]["count"], s["value"]["sum"],
+                    s["value"]["buckets"], **s["labels"])
+    assert h2.count(r=0) == 6
+    assert h2.sum(r=0) == pytest.approx(2 * 5.55)
+    with pytest.raises(ValueError, match="buckets"):
+        h2.merge_series(1, 1.0, [1, 2], r=0)
+
+
+# ------------------------------------------------------------ SLO/goodput
+def test_slo_resolution_and_verdicts():
+    sc = get_scenario("chatbot")
+    assert sc.slo_ttft_s is not None and sc.slo_itl_s is not None
+    slo = SLO.resolve(sc)
+    assert slo.ttft_s == sc.slo_ttft_s
+    # explicit ms flags override; 0 disables a bound
+    slo = SLO.resolve(sc, ttft_ms=100.0, itl_ms=0.0)
+    assert slo.ttft_s == pytest.approx(0.1) and slo.itl_s is None
+
+    tr = RequestTracer()
+    tr.ingress(0, 0.0)
+    tr.admit(0, 0.0)
+    tr.prefill(0, 0.0, 0.05)
+    tr.first_token(0, 0.05)
+    tr.decode([0], 0.05, 0.25)
+    tr.done(0, 0.25, n_tokens=3)      # ttft 50ms, mean itl 100ms
+    b = breakdown(tr.traces[0])
+    assert SLO(ttft_s=0.1, itl_s=0.2).verdict(b) == "met"
+    assert SLO(ttft_s=0.01, itl_s=0.2).verdict(b) == "ttft"
+    assert SLO(ttft_s=0.1, itl_s=0.05).verdict(b) == "itl"
+    assert SLO(ttft_s=0.01, itl_s=0.05).verdict(b) == "both"
+
+
+def test_slo_report_goodput_and_registry_families(tiny_setup):
+    cfg, params = tiny_setup
+    tracer = RequestTracer()
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64,
+                      monitor=False, tracer=tracer)
+    eng.run([Request(i, prompt=list(range(5, 11)), max_new_tokens=3)
+             for i in range(4)])
+    a = analyze(tracer)
+    # impossible TTFT bound -> all violate; blame names a real segment
+    rep = slo_report(a, SLO(ttft_s=1e-9, itl_s=None))
+    assert rep["verdicts"]["ttft"] + rep["verdicts"]["both"] == 4
+    assert rep["goodput_ratio"] == 0.0
+    assert sum(rep["blame"].values()) == 4
+    assert set(rep["blame"]) == set(SEGMENTS)
+    reg = MetricsRegistry()
+    record_goodput(reg, rep)
+    snap = reg.snapshot()
+    assert sum(s["value"] for s in
+               snap["goodput_requests_total"]["series"]) == 4
+    assert sum(s["value"] for s in
+               snap["goodput_blame_total"]["series"]) == 4
+    assert snap["goodput_ratio"]["series"][0]["value"] == 0.0
+    assert snap["slo_ttft_seconds"]["series"][0]["value"] == 1e-9
+    # unconstrained SLO -> goodput 1.0
+    rep2 = slo_report(a, SLO())
+    assert rep2["goodput_ratio"] == 1.0 and sum(rep2["blame"].values()) == 0
+
+
+def test_triage_report_shape(tiny_setup):
+    cfg, params = tiny_setup
+    tracer = RequestTracer()
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64,
+                      monitor=False, tracer=tracer)
+    eng.run([Request(i, prompt=list(range(5, 11)), max_new_tokens=3)
+             for i in range(3)])
+    tri = triage(analyze(tracer), SLO(ttft_s=1e-9), tail_q=50.0)
+    assert tri["conservation"]["ok"]
+    assert tri["n_requests"] == 3
+    assert set(tri["aggregate"]["share"]) == set(SEGMENTS)
+    assert sum(tri["aggregate"]["share"].values()) == pytest.approx(1.0)
+    assert tri["tail"]["dominant"] in SEGMENTS
+    assert tri["tail"]["n"] >= 1
+    assert len(tri["waterfall"]) == 3
+    row = tri["waterfall"][0]
+    assert {"rid", "segments", "ttft_segments", "dominant",
+            "conserved"} <= set(row)
+    assert tri["slo_report"]["goodput_ratio"] == 0.0
+    json.dumps(tri, allow_nan=False)
+
+
+# ------------------------------------------------------- Perfetto round-trip
+def _route_traced(cfg, params, **engine_kwargs):
+    tracer = RequestTracer()
+    fleet = ReplicaFleet(cfg, params, replicas=2, max_batch=2, max_len=64,
+                         monitor=False, tracer=tracer, **engine_kwargs)
+    router = RequestRouter(fleet, tracer=tracer)
+    router.route([Request(i, prompt=list(range(5, 11)), max_new_tokens=3,
+                          arrival_s=0.001 * i) for i in range(4)])
+    return analyze(tracer)
+
+
+def _check_request_trace(trace, n_requests):
+    # strict JSON (Perfetto rejects NaN/Inf)
+    parsed = json.loads(json.dumps(trace, allow_nan=False))
+    evs = parsed["traceEvents"]
+    # one track per request, and its slices tile the whole waterfall
+    tracks = {e["tid"] for e in evs
+              if e.get("pid") == REQUEST_PID and e["ph"] == "X"}
+    assert len(tracks) == n_requests
+    names = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert names == {f"request {rid}" for rid in tracks}
+    # every flow id pairs exactly one start with one finish
+    flows = {}
+    for e in evs:
+        if e.get("cat") == "request_flow":
+            flows.setdefault(e["id"], []).append(e["ph"])
+    assert flows, "no flow arrows emitted"
+    for fid, phs in flows.items():
+        assert sorted(phs) == ["f", "s"], f"flow {fid} unpaired: {phs}"
+    # exec flows land in the engine host lanes (pid 0)
+    by_id = {}
+    for e in evs:
+        if e.get("cat") == "request_flow":
+            by_id.setdefault(e["id"], {})[e["ph"]] = e
+    for pair in by_id.values():
+        assert pair["s"]["pid"] == REQUEST_PID
+        assert pair["f"]["pid"] == 0
+
+
+@pytest.mark.parametrize("engine_kwargs", [
+    {},                                                  # contiguous
+    {"cache": "paged", "block_size": 4, "num_blocks": 6,  # paged+preempt
+     "offload": "host"},
+])
+def test_perfetto_roundtrip_route_traces(tiny_setup, engine_kwargs, tmp_path):
+    """ISSUE satellite: strict-JSON parse, per-request track presence,
+    s/f flow-pair validity, and per-request conservation across
+    contiguous and paged caches."""
+    cfg, params = tiny_setup
+    a = _route_traced(cfg, params, **engine_kwargs)
+    _assert_conserved(a)          # invariant asserted per request
+    trace = request_trace(a, platform="TPU-v5e")
+    _check_request_trace(trace, len(a.breakdowns))
+    path = save_request_trace(a, str(tmp_path / "req_trace.json"))
+    with open(path) as fh:
+        _check_request_trace(json.load(fh), len(a.breakdowns))
+
+
+# ------------------------------------------------- Prometheus escaping fix
+def test_prometheus_label_values_escaped():
+    """Regression: backslash, double-quote, and newline in label values
+    must be escaped per the text-exposition spec (previously raw)."""
+    reg = MetricsRegistry()
+    c = reg.counter("ops_total", labels=("op",))
+    c.inc(1, op='matmul"fused"')
+    c.inc(2, op="a\\b")
+    c.inc(3, op="line1\nline2")
+    h = reg.histogram("t_seconds", labels=("op",), buckets=(1.0,))
+    h.observe(0.5, op='q"x')
+    text = reg.to_prometheus()
+    assert 'ops_total{op="matmul\\"fused\\""} 1' in text
+    assert 'ops_total{op="a\\\\b"} 2' in text
+    assert 'ops_total{op="line1\\nline2"} 3' in text
+    # no raw newline may survive inside any sample line
+    for line in text.splitlines():
+        assert "line2" not in line or "\\n" in line
+    assert 't_seconds_bucket{op="q\\"x",le="1"} 1' in text
+    assert 't_seconds_bucket{op="q\\"x",le="+Inf"} 1' in text
+
+
+def test_prometheus_plain_values_unchanged():
+    reg = MetricsRegistry()
+    reg.counter("a_total").inc(2)
+    reg.gauge("b", labels=("batch",)).set(1.5, batch=4)
+    reg.histogram("c_seconds", buckets=(0.5, 1.0)).observe(0.7)
+    text = reg.to_prometheus()
+    assert "a_total 2" in text
+    assert 'b{batch="4"} 1.5' in text
+    assert 'c_seconds_bucket{le="1"} 1' in text
+    assert 'c_seconds_bucket{le="+Inf"} 1' in text
+
+
+# ------------------------------------------------------------ serialization
+def test_trace_events_sorted_and_trace_queries():
+    tr = RequestTrace(rid=0, arrival_s=0.0)
+    tracer = RequestTracer()
+    tracer.traces[0] = tr
+    tracer.admit(0, 1.0)
+    tracer.preempt(0, 1.0)           # same timestamp: lifecycle order
+    tracer.done(0, 2.0, n_tokens=1)
+    kinds = [e.kind for e in tr.sorted_events()]
+    assert kinds == ["admit", "preempt", "done"]
+    assert tr.count("admit") == 1
+    assert tracer.completed() == [tr]
+    tracer.clear()
+    assert len(tracer) == 0

@@ -14,6 +14,7 @@ from benchmarks.common import FAST, csv_row
 from repro.configs import get_config, reduced
 from repro.core.device_model import PLATFORMS, offload_cost_s
 from repro.inference.engine import Request, ServeEngine
+from repro.inference.kv_quant import quantize_kv
 from repro.kernels.decode_attention.ops import (decode_attention,
                                                 paged_decode_attention)
 from repro.models import init_params
@@ -68,13 +69,26 @@ def run() -> list[str]:
     rows.append(csv_row("paged_decode/ops_paged", tp * 1e6,
                         f"B={B};pages={B * nb};bs={bs};"
                         f"vs_contig={tp / tc:.2f}x"))
+    # quantized pool: int8 payloads + per-(token, head) f32 scales,
+    # dequantized inside the kernel after each page DMA
+    qk, sk = quantize_kv(kp)
+    qv, sv = quantize_kv(vp)
+    tq = _time(lambda: paged_decode_attention(q, qk, qv, tables, lens,
+                                              scale=0.2, k_scale=sk,
+                                              v_scale=sv))
+    rows.append(csv_row("paged_decode/ops_paged_int8", tq * 1e6,
+                        f"B={B};pages={B * nb};bs={bs};"
+                        f"vs_paged_bf16={tq / tp:.2f}x"))
 
     # ---- engine level: decode steps through each cache, same traffic
     cfg = reduced(get_config(ARCH), n_layers=2)
     params = init_params(jax.random.PRNGKey(0), cfg)
     st_c = _serve(cfg, params)
     st_p = _serve(cfg, params, cache="paged", block_size=BLOCK)
-    for name, st in (("engine_contiguous", st_c), ("engine_paged", st_p)):
+    st_q = _serve(cfg, params, cache="paged", block_size=BLOCK,
+                  kv_dtype="int8")
+    for name, st in (("engine_contiguous", st_c), ("engine_paged", st_p),
+                     ("engine_paged_int8", st_q)):
         steps = st.step_times_s
         mean_step = sum(steps) / len(steps) if steps else 0.0
         rows.append(csv_row(

@@ -1,0 +1,48 @@
+"""Serving tier: scheduler (`engine`), execution backends, replica fleet
+(`fleet`/`router`), and the KV quantization math (`kv_quant`).
+
+`kv_quant` is imported eagerly (it only needs jax); the heavyweight
+serving classes are re-exported lazily so `import repro.inference` stays
+cheap and cycle-free for the layers that consume the quant helpers.
+"""
+from __future__ import annotations
+
+from repro.inference import kv_quant
+from repro.inference.kv_quant import (
+    KV_DTYPES,
+    capacity_ratio,
+    dequantize_kv,
+    kv_entry_bytes,
+    quantize_kv,
+)
+
+__all__ = [
+    "KV_DTYPES",
+    "capacity_ratio",
+    "dequantize_kv",
+    "kv_entry_bytes",
+    "kv_quant",
+    "quantize_kv",
+    "Request",
+    "ServeEngine",
+    "ReplicaFleet",
+    "RequestRouter",
+]
+
+_LAZY = {
+    "Request": ("repro.inference.engine", "Request"),
+    "ServeEngine": ("repro.inference.engine", "ServeEngine"),
+    "ReplicaFleet": ("repro.inference.fleet", "ReplicaFleet"),
+    "RequestRouter": ("repro.inference.router", "RequestRouter"),
+}
+
+
+def __getattr__(name: str):
+    """Lazy re-export of the serving surface (PEP 562)."""
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod_name), attr)

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.inference.backends import CallAccount, make_backend
+from repro.inference.kv_quant import KV_DTYPES
 from repro.inference.speculative import (default_draft_config,
                                          draft_params_from_target,
                                          is_truncation_of, pick_spec_k,
@@ -155,6 +156,12 @@ class EngineStats:
         "modeled_draft_launch_tax_s": (
             "engine_modeled_draft_launch_tax_seconds", float,
             "draft stream launches, platform-priced"),
+        # ---- prefix sharing (share_prefix=True; zero otherwise)
+        "prefix_adoptions": ("engine_prefix_adoptions", int,
+                             "admissions that adopted shared prefix blocks"),
+        "shared_prefix_tokens": ("engine_shared_prefix_tokens", int,
+                                 "prompt tokens served from shared blocks "
+                                 "instead of re-prefilling"),
     }
 
     def __init__(self, plan: str = "jit", tp: int = 1, registry=None):
@@ -309,6 +316,8 @@ class ServeEngine:
                  cache: str = "contiguous", block_size: int = 16,
                  num_blocks: Optional[int] = None, offload: str = "none",
                  prefill_chunk: Optional[int] = None,
+                 kv_dtype: str = "bf16", share_prefix: bool = False,
+                 prefix_len: int = 8,
                  speculative: bool = False, draft_config=None,
                  draft_params=None, spec_k: int = 4,
                  spec_inflection: Optional[int] = None, monitor=True,
@@ -335,6 +344,15 @@ class ServeEngine:
             raise ValueError(
                 "offload= and prefill_chunk= need cache='paged' (the "
                 "contiguous cache has no blocks to evict or chunk over)")
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(f"unknown kv_dtype {kv_dtype!r}; "
+                             f"expected one of {KV_DTYPES}")
+        if cache != "paged" and (kv_dtype != "bf16" or share_prefix):
+            raise ValueError(
+                "kv_dtype= and share_prefix= need cache='paged' (the "
+                "contiguous cache has no pages to quantize or share)")
+        if prefix_len < 1:
+            raise ValueError(f"prefix_len must be >= 1, got {prefix_len}")
         if not speculative and (draft_config is not None
                                 or draft_params is not None):
             raise ValueError(
@@ -424,14 +442,22 @@ class ServeEngine:
             self.draft_lengths = np.zeros(max_batch, np.int32)
         # derived, not stored: an injected backend= decides the degree
         self.tp = self.backend.info.tp
+        self.kv_dtype = kv_dtype
+        self.share_prefix = bool(share_prefix)
+        self.prefix_len = prefix_len
         if cache == "paged":
             from repro.kvcache import (HostOffloadTier, PagedKVCache,
                                        default_num_blocks)
+            # default pool sized by BYTES: a quantized pool holds the same
+            # byte budget as the bf16 full-capacity pool, in more blocks
             nb = default_num_blocks(max_batch, max_len, block_size,
-                                    num_blocks)
+                                    num_blocks, kv_dtype=kv_dtype,
+                                    hd=cfg.hd,
+                                    payload_bytes=jnp.dtype(
+                                        cfg.cdtype).itemsize)
             self.kv = PagedKVCache(cfg, num_blocks=nb,
                                    block_size=block_size, max_len=max_len,
-                                   dtype=cfg.cdtype)
+                                   dtype=cfg.cdtype, kv_dtype=kv_dtype)
             self.cache = self.backend.init_paged_cache(self.kv)
             self.offload_tier = (
                 HostOffloadTier(platform, tp=self.backend.info.tp)
@@ -440,6 +466,11 @@ class ServeEngine:
             self.kv = None
             self.offload_tier = None
             self.cache = self.backend.init_contiguous_cache()
+        # prefix-sharing donor registry: 8-token prompt-prefix key (the
+        # SAME key the router's prefix-affinity policy hashes, so sticky
+        # routing lands same-prefix requests where the donor blocks live)
+        # -> (donor rid, donor's full verified token sequence)
+        self._prefix_donors: dict = {}
         self._prefill_tasks: dict = {}      # slot -> _PrefillTask
         self._preempted: list = []          # evicted Requests awaiting resume
         self._pending: list = []            # submitted, not yet admitted
@@ -693,10 +724,101 @@ class ServeEngine:
         self._admit_seq += 1
         self.slots[slot] = req
         self.lengths[slot] = 0
+        # prefix sharing: map the leading full blocks of a donor with the
+        # same verified token prefix into this request's table, and start
+        # the prefill past them (the skipped tokens' KV already exists) —
+        # works for fresh admits AND recompute replays, whose rebuilt KV
+        # would be byte-identical to the donor pages anyway
+        shared = self._adopt_prefix(req, toks) if self.share_prefix else 0
         self._prefill_tasks[slot] = _PrefillTask(
-            req=req, slot=slot, toks=toks, replay=replay)
+            req=req, slot=slot, toks=toks, pos=shared, replay=replay)
         if self.tracer is not None:
             self.tracer.admit(req.rid, self.now, resume=resume is not None)
+        return True
+
+    # bound on live donor candidates tracked per prefix key
+    _DONORS_PER_KEY = 4
+
+    def _register_donor(self, key, rid: int, toks, written: int) -> None:
+        """Add/refresh a donor candidate for ``key``.  ``written`` caps how
+        many of ``toks`` have fully-written KV blocks (a finished prefill
+        covers its whole prompt; an in-flight adopter only its shared
+        region)."""
+        cands = self._prefix_donors.setdefault(key, [])
+        cands[:] = [c for c in cands if c[0] != rid]
+        cands.insert(0, (rid, tuple(toks), written))
+        del cands[self._DONORS_PER_KEY:]
+
+    def _adopt_prefix(self, req: Request, toks: list) -> int:
+        """Adopt a donor's leading blocks when its verified token sequence
+        shares a block-aligned prefix with ``toks``.  Only FULL blocks
+        strictly inside the prompt are shared (the final prompt token must
+        be re-written so its logits exist), so normal prefill/decode never
+        writes into a shared block — ``_cow_protect`` guards the rest.
+        Returns the number of prompt tokens covered by adopted blocks."""
+        if len(toks) < self.prefix_len:
+            return 0
+        key = tuple(toks[:self.prefix_len])
+        cands = self._prefix_donors.get(key)
+        if not cands:
+            return 0
+        bs = self.kv.block_size
+        shared, live = 0, []
+        for drid, dtoks, written in cands:
+            if drid == req.rid:
+                continue
+            dblocks = self.kv.pool.owned(drid)
+            if not dblocks:
+                continue               # donor drained: prune this candidate
+            live.append((drid, dtoks, written))
+            if shared:
+                continue               # already adopted from a fresher donor
+            common = 0
+            for a, b in zip(dtoks, toks):
+                if a != b:
+                    break
+                common += 1
+            common = min(common, written)
+            n = min(min(common, len(toks) - 1) // bs, len(dblocks))
+            if n <= 0:
+                continue
+            self.kv.pool.adopt(req.rid, dblocks[:n])
+            self.stats.prefix_adoptions += 1
+            self.stats.shared_prefix_tokens += n * bs
+            shared = n * bs
+        if live:
+            self._prefix_donors[key] = live
+        else:
+            self._prefix_donors.pop(key, None)
+        if shared:
+            # the adopter itself now holds fully-written shared blocks, so
+            # it can donate them even before its own prefill finishes —
+            # this keeps sharing chains alive across short donor lifetimes
+            self._register_donor(key, req.rid, toks, shared)
+        return shared
+
+    def _cow_protect(self, rid, start: int, end: int) -> bool:
+        """Copy-on-write guard: before a write into token range
+        ``[start, end)``, diverge any covering block that is still shared
+        (refcount > 1) — copy the page, swap the private block into the
+        owner's table.  False = no free block for the copy; the caller
+        stalls exactly like an ``ensure`` shortfall."""
+        if not self.share_prefix:
+            return True
+        pool = self.kv.pool
+        ids = pool.owned(rid)
+        if not ids:
+            return True
+        bs = self.kv.block_size
+        first = start // bs
+        last = min((max(end, start + 1) - 1) // bs, len(ids) - 1)
+        for j in range(first, last + 1):
+            if pool.ref_count(ids[j]) > 1:
+                try:
+                    old, new = pool.cow(rid, j)
+                except MemoryError:
+                    return False
+                self.cache = self.kv.copy_pages(self.cache, old, new)
         return True
 
     def _restore_from_host(self, req: Request, slot: int,
@@ -834,6 +956,11 @@ class ServeEngine:
         req, slot = task.req, task.slot
         del self._prefill_tasks[slot]
         self.lengths[slot] = len(task.toks)
+        if self.share_prefix and len(task.toks) >= self.prefix_len:
+            # the newest finished prefill becomes the freshest donor
+            # candidate for its prefix key; its whole prompt is written
+            self._register_donor(tuple(task.toks[:self.prefix_len]),
+                                 req.rid, task.toks, len(task.toks))
         if task.replay:
             if self.speculative:
                 self._draft_prefill_slot(slot, task.toks)
@@ -871,6 +998,9 @@ class ServeEngine:
             if not self._ensure_paged_blocks(
                     task.req, task.pos + chunk_len, exclude=slot):
                 continue            # stalled on blocks; retry next step
+            if not self._cow_protect(task.req.rid, task.pos,
+                                     task.pos + chunk_len):
+                continue            # stalled on a CoW copy block
             self._run_prefill_chunk(task, chunk_len)
             progressed = True
             if task.pos >= len(task.toks):
@@ -895,6 +1025,10 @@ class ServeEngine:
                 # sit this step out — a finishing prefill frees blocks or
                 # becomes preemptable next step.  A true deadlock (nothing
                 # anywhere can progress) is raised by run().
+                stalled.add(i)
+            elif not self._cow_protect(self.slots[i].rid,
+                                       int(self.lengths[i]),
+                                       int(self.lengths[i]) + 1):
                 stalled.add(i)
         active = [i for i in active
                   if self.slots[i] is not None and i not in stalled]
@@ -993,6 +1127,9 @@ class ServeEngine:
                 want = min(int(self.lengths[i]) + k + 1, self.T)
                 if not self._ensure_paged_blocks(self.slots[i], want,
                                                  exclude=i):
+                    stalled.add(i)
+                elif not self._cow_protect(self.slots[i].rid,
+                                           int(self.lengths[i]), want):
                     stalled.add(i)
             active = [i for i in active
                       if self.slots[i] is not None and i not in stalled]
@@ -1326,6 +1463,7 @@ class ServeEngine:
             self._prefill_tasks = {}
             self._preempted = []
             self._admit_seq = 0
+            self._prefix_donors = {}
             if self.offload_tier is not None:
                 self.offload_tier.clear()
         if self.telemetry is not None:

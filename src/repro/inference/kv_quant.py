@@ -1,15 +1,36 @@
-"""Int8 KV-cache quantization — the next decode lever identified in
-EXPERIMENTS.md §Perf-3 (decode is KV-streaming-bound; int8 halves both
-cache residency and read traffic).
+"""Int8 KV-cache quantization (decode is KV-streaming-bound: int8 halves
+both cache residency and the per-step read traffic, which the
+memory-pressure sweep shows is what caps admission under load).
 
-Per-(token, head) symmetric quantization: k row (hd,) -> int8 + one f32
-scale.  Dequantization fuses into the attention load on TPU; the accuracy
-cost is well inside decode tolerances (validated in tests vs bf16 cache).
+Per-(token, head) symmetric quantization: a K/V row (hd,) becomes an int8
+payload plus one f32 scale, so a cached entry costs ``hd + 4`` bytes
+instead of ``2 * hd`` (bf16) — a ~1.88x capacity gain at hd=64.
+Dequantization happens at load time, inside the paged Pallas decode
+kernel (``kernels.decode_attention``) and the pure-XLA paged branch
+(``layers.attention._paged_attention_fwd``); the bf16 intermediate never
+lives in the cache.  Accuracy is tolerance-bounded vs the bf16 paged
+path in tests (round-trip error <= scale/2 per element).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+KV_DTYPES = ("bf16", "int8")
+
+
+def kv_entry_bytes(hd: int, kv_dtype: str = "bf16") -> int:
+    """Cache bytes per (token, head) entry: int8 payload + f32 scale vs
+    bf16 payload."""
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}")
+    return hd + 4 if kv_dtype == "int8" else 2 * hd
+
+
+def capacity_ratio(hd: int) -> float:
+    """How many int8 entries fit in the bytes of one bf16 entry
+    (2*hd / (hd+4) — ~1.88x at hd=64)."""
+    return kv_entry_bytes(hd, "bf16") / kv_entry_bytes(hd, "int8")
 
 
 def quantize_kv(x):

@@ -7,7 +7,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention.kernel import (
-    decode_attention_kernel, paged_decode_attention_kernel)
+    decode_attention_kernel, paged_decode_attention_kernel,
+    paged_decode_attention_quant_kernel)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "block_kv", "interpret"))
@@ -40,12 +41,17 @@ def decode_attention(q, k, v, kv_len=None, *, scale: float, block_kv=512,
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_decode_attention(q, k_pages, v_pages, block_tables, kv_lens, *,
-                           scale: float, interpret=True):
+                           scale: float, interpret=True,
+                           k_scale=None, v_scale=None):
     """Decode attention through a block-table paged KV cache.
 
     q: (B,HQ,hd); k_pages/v_pages: (P,bs,HKV,hd) pooled token pages (the
     ``repro.kvcache`` layout); block_tables: (B,NB) int32 page ids (entries
     past a row's length may be any value); kv_lens: (B,) valid tokens.
+
+    With ``k_scale``/``v_scale`` — (P,bs,HKV) f32, the quantized-pool
+    layout — the pages are int8 payloads and the quantized kernel
+    dequantizes each page tile after the DMA.
 
     The wrapper re-lays pages head-major — (HKV,P,bs,hd) — so each grid
     step of the kernel streams one (bs,hd) page tile picked by the
@@ -65,6 +71,13 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, kv_lens, *,
     bt = jnp.clip(block_tables.astype(jnp.int32), 0, n_pages - 1)
     kv_lens = jnp.minimum(kv_lens.astype(jnp.int32),
                           block_tables.shape[1] * bs)
+    if k_scale is not None:
+        ks = jnp.transpose(k_scale, (2, 0, 1)).astype(jnp.float32)
+        vs = jnp.transpose(v_scale, (2, 0, 1)).astype(jnp.float32)
+        o = paged_decode_attention_quant_kernel(
+            q[:, :, None, :], kp, vp, ks, vs, bt, kv_lens,
+            scale=scale, interpret=interpret)
+        return o[:, :, 0, :hd]
     o = paged_decode_attention_kernel(q[:, :, None, :], kp, vp, bt, kv_lens,
                                       scale=scale, interpret=interpret)
     return o[:, :, 0, :hd]

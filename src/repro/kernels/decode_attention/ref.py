@@ -52,3 +52,14 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, kv_lens, *,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bht,bhtd->bhd", p, vf)
     return o.astype(q.dtype)
+
+
+def paged_decode_attention_quant_ref(q, k_pages, v_pages, k_scale, v_scale,
+                                     block_tables, kv_lens, *, scale: float):
+    """Quantized-pool oracle: k_pages/v_pages are (P,bs,HKV,hd) int8 with
+    per-(token, head) f32 scales (P,bs,HKV); dequantize the whole pool in
+    f32 and defer to ``paged_decode_attention_ref``."""
+    kf = k_pages.astype(jnp.float32) * k_scale[..., None]
+    vf = v_pages.astype(jnp.float32) * v_scale[..., None]
+    return paged_decode_attention_ref(q, kf, vf, block_tables, kv_lens,
+                                      scale=scale)

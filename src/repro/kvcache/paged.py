@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.inference.kv_quant import KV_DTYPES
 from repro.kvcache.allocator import BlockPool
 from repro.models import make_paged_cache
 
@@ -23,13 +24,17 @@ class PagedKVCache:
     """Geometry + allocator for a block-table paged KV cache."""
 
     def __init__(self, cfg, *, num_blocks: int, block_size: int,
-                 max_len: int, dtype=None):
+                 max_len: int, dtype=None, kv_dtype: str = "bf16"):
         if max_len < 1:
             raise ValueError(f"max_len must be >= 1, got {max_len}")
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}")
         self.cfg = cfg
         self.block_size = block_size
         self.num_blocks = num_blocks
         self.max_len = max_len
+        self.kv_dtype = kv_dtype
         # every block-table row spans the full max_len so the gathered
         # logical view has ONE static shape (ceil(max_len/bs) pages) —
         # no recompiles as sequences grow, and bitwise-comparable masked
@@ -44,9 +49,13 @@ class PagedKVCache:
         return self.num_blocks
 
     def make_pages(self):
-        """Fresh zeroed pages pytree for ``forward``."""
-        return make_paged_cache(self.cfg, self.num_blocks, self.block_size,
-                                self.dtype)
+        """Fresh zeroed pages pytree for ``forward`` (quantized layout when
+        ``kv_dtype="int8"``).  Stamps the pool with the per-block byte
+        size so ``kv_bytes_saved`` prices shared blocks correctly."""
+        pages = make_paged_cache(self.cfg, self.num_blocks, self.block_size,
+                                 self.dtype, kv_dtype=self.kv_dtype)
+        self.pool.block_bytes = self.block_bytes(pages, 1)
+        return pages
 
     # ------------------------------------------------------------ tables
     def table_row(self, owner) -> np.ndarray:
@@ -84,6 +93,13 @@ class PagedKVCache:
                for leaf, h in zip(leaves, host_leaves)]
         return jax.tree.unflatten(treedef, new)
 
+    def copy_pages(self, pages, src_id: int, dst_id: int):
+        """Copy-on-write divergence: duplicate block ``src_id``'s page
+        contents into freshly allocated block ``dst_id`` across every
+        cache leaf, so the subsequent write lands on a private copy."""
+        return jax.tree.map(lambda p: p.at[:, dst_id].set(p[:, src_id]),
+                            pages)
+
     def block_bytes(self, pages, n_blocks: int = 1) -> int:
         """Bytes of KV held by ``n_blocks`` pool blocks across all layers."""
         total = 0
@@ -94,15 +110,30 @@ class PagedKVCache:
         return total
 
     def reset(self) -> None:
+        block_bytes = self.pool.block_bytes
         self.pool = BlockPool(self.num_blocks, self.block_size)
+        self.pool.block_bytes = block_bytes
 
 
 def default_num_blocks(max_batch: int, max_len: int, block_size: int,
-                       num_blocks: Optional[int] = None) -> int:
-    """Pool size: explicit, else enough for every slot at full length
-    (capacity-equivalent to the contiguous cache — no pressure)."""
+                       num_blocks: Optional[int] = None,
+                       kv_dtype: str = "bf16",
+                       hd: Optional[int] = None,
+                       payload_bytes: int = 2) -> int:
+    """Pool size: explicit, else sized by KV BYTES — enough bytes for
+    every slot at full length in the native cache dtype
+    (capacity-equivalent to the contiguous cache).  A quantized pool
+    holds the SAME byte budget, so with ``kv_dtype="int8"`` (and ``hd``
+    given, for the per-entry byte math) the default grows by
+    ``payload_bytes*hd / (hd+4)`` blocks (~1.88x for bf16 at hd=64) —
+    that's where the extra admission capacity comes from.
+    ``payload_bytes`` is the native dtype's itemsize (2 for bf16)."""
     if num_blocks is not None:
         if num_blocks < 1:
             raise ValueError(f"num_blocks must be >= 1, got {num_blocks}")
         return num_blocks
-    return max_batch * (-(-max_len // block_size))
+    base = max_batch * (-(-max_len // block_size))
+    if kv_dtype == "bf16" or hd is None:
+        return base
+    ratio = (payload_bytes * hd) / (hd + 4)
+    return int(base * ratio)

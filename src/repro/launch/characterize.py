@@ -111,6 +111,11 @@ def main():
                     help="pool sizes as fractions of the no-pressure pool")
     ap.add_argument("--block-size", type=int, default=4,
                     help="tokens per KV block for --memory-sweep")
+    ap.add_argument("--kv-dtypes", default="bf16",
+                    help="comma-separated paged-KV storage dtypes for "
+                         "--memory-sweep (e.g. bf16,int8); each pool is "
+                         "held at the first dtype's device byte budget, "
+                         "so int8 cells fit proportionally more blocks")
     ap.add_argument("--sweep-max-batch", type=int, default=4)
     ap.add_argument("--tp-sweep", action="store_true",
                     help="model the tensor-parallel dispatch/collective "
@@ -211,17 +216,26 @@ def main():
             cfg, params, scenario=args.scenario,
             platforms=[p for p in args.sweep_platforms.split(",") if p],
             pool_fracs=[float(f) for f in args.pool_fracs.split(",") if f],
+            kv_dtypes=[d for d in args.kv_dtypes.split(",") if d],
             max_batch=args.sweep_max_batch, max_len=args.max_len,
             block_size=args.block_size, n_requests=args.requests,
             seed=args.seed, prompt_cap=args.prompt_cap or None,
             output_cap=args.output_cap or None)
         for r in sweep["points"]:
             print(f"{r['platform']:<12s} {r['coupling']:<3s} "
-                  f"link={r['link_gbps']}GB/s pool={r['pool_frac']:<5} "
+                  f"link={r['link_gbps']}GB/s {r['kv_dtype']:<4s} "
+                  f"pool={r['pool_frac']:<5} blocks={r['num_blocks']:<4d} "
                   f"preempt={r['preemptions']:<3d} "
                   f"offload={r['offload_bytes']}B "
                   f"tax={r['modeled_offload_tax_us']}us "
                   f"tax/tok={r['offload_tax_per_token_us']}us")
+        for d in sweep["kv_dtype_deltas"]:
+            print(f"delta[{d['platform']} pool={d['pool_frac']}] "
+                  f"{d['baseline']}->{d['kv_dtype']}: "
+                  f"capacity x{d['capacity_ratio']} "
+                  f"preempt {d['preemptions'][d['baseline']]}->"
+                  f"{d['preemptions'][d['kv_dtype']]} "
+                  f"tax_delta={d['offload_tax_delta_us']}us")
         os.makedirs(args.out_dir, exist_ok=True)
         path = os.path.join(args.out_dir, "memory_sweep.json")
         with open(path, "w") as f:

@@ -32,6 +32,7 @@ from repro.core.fusion import json_sanitize
 from repro.inference.engine import (CACHE_MODES, PLAN_STRATEGIES, Request,
                                     ServeEngine)
 from repro.inference.fleet import ReplicaFleet
+from repro.inference.kv_quant import KV_DTYPES
 from repro.inference.router import POLICIES, RequestRouter
 from repro.configs import get_config, reduced
 from repro.models import init_params
@@ -54,11 +55,17 @@ def fleet_report(router, report, fleet, wall_s: float) -> dict:
     per_replica = {}
     ttft_all = []
     tokens = 0
+    adoptions = shared_tokens = peak_shared = 0
     for rep in fleet.live():
         st = rep.engine.stats
         ttft = sorted(st.ttft_s.values())
         ttft_all.extend(ttft)
         tokens += st.tokens_out
+        kv = rep.engine.kv
+        rep_peak = kv.pool.peak_shared_blocks if kv is not None else 0
+        adoptions += st.prefix_adoptions
+        shared_tokens += st.shared_prefix_tokens
+        peak_shared += rep_peak
         per_replica[str(rep.rid)] = {
             "state": rep.state,
             "dispatched": rep.dispatched,
@@ -66,6 +73,9 @@ def fleet_report(router, report, fleet, wall_s: float) -> dict:
             "decode_steps": st.decode_steps,
             "decode_dispatches": st.decode_dispatches,
             "preemptions": st.preemptions,
+            "prefix_adoptions": st.prefix_adoptions,
+            "shared_prefix_tokens": st.shared_prefix_tokens,
+            "kv_shared_blocks_peak": rep_peak,
             "mean_ttft_ms": round(st.mean_ttft_s * 1e3, 3),
             "clock_s": round(rep.engine.now, 6),
         }
@@ -77,6 +87,9 @@ def fleet_report(router, report, fleet, wall_s: float) -> dict:
         "requeued": report.requeued,
         "token_events": report.token_events,
         "fleet_tokens_out": tokens,
+        "prefix_adoptions": adoptions,
+        "shared_prefix_tokens": shared_tokens,
+        "kv_shared_blocks_peak": peak_shared,
         "makespan_s": round(report.clock_s, 6),
         "fleet_tok_per_s": round(tokens / report.clock_s, 1)
         if report.clock_s else 0.0,
@@ -118,6 +131,16 @@ def main():
     ap.add_argument("--cache", default="contiguous", choices=CACHE_MODES)
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--num-blocks", type=int, default=None)
+    ap.add_argument("--kv-dtype", default="bf16", choices=KV_DTYPES,
+                    help="paged KV storage dtype per replica (int8: "
+                         "quantized pages, dequantized at load)")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="copy-on-write prefix sharing inside each "
+                         "replica's block pool (paged cache only)")
+    ap.add_argument("--shared-prefix-tokens", type=int, default=0,
+                    help="prepend the same sampled system prompt of this "
+                         "many tokens to every request (pairs with "
+                         "--policy prefix-affinity and --share-prefix)")
     ap.add_argument("--validate-mesh", action="store_true",
                     help="require the device pool to hold the "
                          "(replicas x tp) fleet mesh (default: simulate "
@@ -152,6 +175,10 @@ def main():
     if args.remove_at is not None and args.replicas < 2:
         ap.error("--remove-at needs --replicas >= 2 (the last serving "
                  "replica cannot drain)")
+    if args.cache != "paged" and (args.kv_dtype != "bf16"
+                                  or args.share_prefix):
+        ap.error("--kv-dtype/--share-prefix need --cache paged (the "
+                 "contiguous cache has no block pool to quantize or share)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -161,13 +188,16 @@ def main():
     engine_kwargs = dict(max_batch=args.max_batch, max_len=args.max_len,
                          plan=args.plan, platform=args.platform,
                          cache=args.cache, block_size=args.block_size,
-                         num_blocks=args.num_blocks)
+                         num_blocks=args.num_blocks,
+                         kv_dtype=args.kv_dtype,
+                         share_prefix=args.share_prefix)
 
     wl = sample_requests(args.scenario, args.requests, seed=args.seed,
                          vocab_size=cfg.vocab_size,
                          prompt_cap=args.prompt_cap,
                          output_cap=args.output_cap,
-                         time_scale=args.time_scale)
+                         time_scale=args.time_scale,
+                         shared_prefix=args.shared_prefix_tokens)
 
     if not args.no_warmup:
         # pay jit/plan compile on a throwaway engine: replicas share the

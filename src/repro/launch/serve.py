@@ -47,6 +47,7 @@ from repro.core.export import save_request_trace
 from repro.core.fusion import json_sanitize
 from repro.inference.engine import (CACHE_MODES, OFFLOAD_MODES,
                                     PLAN_STRATEGIES, Request, ServeEngine)
+from repro.inference.kv_quant import KV_DTYPES
 from repro.configs import get_config, reduced
 from repro.models import init_params
 from repro.telemetry.critical_path import (SLO, analyze, record_goodput,
@@ -78,6 +79,16 @@ def main():
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="block-pool size; default fits every slot at "
                          "--max-len (no memory pressure)")
+    ap.add_argument("--kv-dtype", default="bf16", choices=KV_DTYPES,
+                    help="paged KV storage dtype: int8 quantizes pages "
+                         "per-(token, head) with f32 scales (entry cost "
+                         "hd+4 bytes vs 2*hd) and dequantizes at load; "
+                         "the default pool sizes up by the byte ratio")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="copy-on-write prefix sharing: requests whose "
+                         "prompts share a verified token prefix map their "
+                         "leading full blocks to the same pool pages "
+                         "(paged cache only)")
     ap.add_argument("--offload", default="none", choices=OFFLOAD_MODES,
                     help="host: evict cold blocks to host memory and "
                          "restore on resume; none: preempt + recompute")
@@ -125,6 +136,11 @@ def main():
                  "whole-step executable with no kernel-level provenance "
                  "to attribute")
 
+    if args.cache != "paged" and (args.kv_dtype != "bf16"
+                                  or args.share_prefix):
+        ap.error("--kv-dtype/--share-prefix need --cache paged (the "
+                 "contiguous cache has no block pool to quantize or share)")
+
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
@@ -166,6 +182,8 @@ def main():
                       tp=args.tp,
                       cache=args.cache, block_size=args.block_size,
                       num_blocks=args.num_blocks, offload=args.offload,
+                      kv_dtype=args.kv_dtype,
+                      share_prefix=args.share_prefix,
                       prefill_chunk=args.prefill_chunk,
                       speculative=args.speculative, draft_config=draft_cfg,
                       spec_k=args.spec_k,
@@ -204,6 +222,14 @@ def main():
             "mean": round(st.mean_block_pool_utilization, 3),
             "peak": round(st.peak_block_pool_utilization, 3),
         },
+        "kv_dtype": args.kv_dtype,
+        "share_prefix": args.share_prefix,
+        "num_blocks": (eng.kv.num_blocks
+                       if args.cache == "paged" else 0),
+        "prefix_adoptions": st.prefix_adoptions,
+        "shared_prefix_tokens": st.shared_prefix_tokens,
+        "kv_cow_copies": (eng.kv.pool.cow_copies_total
+                          if args.cache == "paged" else 0),
         "preemptions": st.preemptions,
         "rejected": st.rejected,
         "prefill_chunks": st.prefill_chunks,

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.inference.kv_quant import dequantize_kv, quantize_kv
 from repro.layers.common import apply_rope, dense_init, softcap, split_keys
 
 NEG_INF = -2.3819763e38  # large negative, bf16-safe
@@ -161,6 +162,7 @@ def _paged_attention_fwd(q, k, v, cache, block_tables, positions, lengths,
     b, s = q.shape[0], q.shape[1]
     kp, vp = cache["k_pages"], cache["v_pages"]
     n_pages, bs_blk = kp.shape[0], kp.shape[1]
+    quantized = "k_scale" in cache
     blk = positions // bs_blk
     nb = block_tables.shape[1]
     pages = jnp.take_along_axis(block_tables, jnp.minimum(blk, nb - 1), axis=1)
@@ -168,13 +170,33 @@ def _paged_attention_fwd(q, k, v, cache, block_tables, positions, lengths,
     # must DROP, not clamp onto the last real page
     pages = jnp.where(blk < nb, pages, n_pages)
     offs = positions % bs_blk
-    kp = kp.at[pages, offs].set(k.astype(kp.dtype), mode="drop")
-    vp = vp.at[pages, offs].set(v.astype(vp.dtype), mode="drop")
-    new_cache = {"k_pages": kp, "v_pages": vp}
+    if quantized:
+        # quantize-on-write: only the int8 payload + per-(token,head) f32
+        # scale ever live in the pool; the bf16 intermediate is transient
+        qk, sk = quantize_kv(k)
+        qv, sv = quantize_kv(v)
+        kp = kp.at[pages, offs].set(qk, mode="drop")
+        vp = vp.at[pages, offs].set(qv, mode="drop")
+        ksp = cache["k_scale"].at[pages, offs].set(sk, mode="drop")
+        vsp = cache["v_scale"].at[pages, offs].set(sv, mode="drop")
+        new_cache = {"k_pages": kp, "v_pages": vp,
+                     "k_scale": ksp, "v_scale": vsp}
+    else:
+        kp = kp.at[pages, offs].set(k.astype(kp.dtype), mode="drop")
+        vp = vp.at[pages, offs].set(v.astype(vp.dtype), mode="drop")
+        new_cache = {"k_pages": kp, "v_pages": vp}
     safe = jnp.clip(block_tables, 0, n_pages - 1)
     t = block_tables.shape[1] * bs_blk
-    kg = kp[safe].reshape(b, t, kp.shape[2], kp.shape[3])
-    vg = vp[safe].reshape(b, t, vp.shape[2], vp.shape[3])
+    if quantized:
+        # dequantize-at-load: gather int8 pages + scales, widen to the
+        # compute dtype only in the transient logical view
+        kg = dequantize_kv(kp[safe], ksp[safe], k.dtype)
+        vg = dequantize_kv(vp[safe], vsp[safe], v.dtype)
+        kg = kg.reshape(b, t, kp.shape[2], kp.shape[3])
+        vg = vg.reshape(b, t, vp.shape[2], vp.shape[3])
+    else:
+        kg = kp[safe].reshape(b, t, kp.shape[2], kp.shape[3])
+        vg = vp[safe].reshape(b, t, vp.shape[2], vp.shape[3])
     kv_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
     if lengths is not None:
         # continuous-batching decode / speculative verify: row b just wrote
@@ -320,10 +342,21 @@ def make_self_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
 
 
 def make_paged_self_cache(cfg: ModelConfig, num_pages: int, block_size: int,
-                          dtype):
+                          dtype, quantized: bool = False):
     """Pool-global paged KV: pages are shared by all slots via block tables
-    (``repro.kvcache``) rather than pre-carved per batch row."""
+    (``repro.kvcache``) rather than pre-carved per batch row.
+
+    ``quantized``: int8 payload pages plus per-(token, head) f32 scale
+    pages (``inference.kv_quant`` layout) — hd bytes + 4 scale bytes per
+    (token, head) instead of 2*hd, so the same pool bytes hold
+    ~2*hd/(hd+4) more tokens.
+    """
     shape = (num_pages, block_size, cfg.n_kv_heads, cfg.hd)
+    if quantized:
+        return {"k_pages": jnp.zeros(shape, jnp.int8),
+                "v_pages": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1], jnp.float32),
+                "v_scale": jnp.zeros(shape[:-1], jnp.float32)}
     return {"k_pages": jnp.zeros(shape, dtype),
             "v_pages": jnp.zeros(shape, dtype)}
 

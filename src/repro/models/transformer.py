@@ -126,12 +126,17 @@ def make_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def make_paged_cache(cfg: ModelConfig, num_pages: int, block_size: int,
-                     dtype=None):
+                     dtype=None, kv_dtype: str = "bf16"):
     """Stacked (over superblocks) PAGED decode cache: per attention slot a
     pool of ``num_pages`` fixed-size token pages shared across batch rows
     through block tables (``forward(..., block_tables=...)``).  Only
     pure-attention stacks page — recurrent state (mamba/rwkv) is O(1) per
-    slot and has nothing to page."""
+    slot and has nothing to page.
+
+    ``kv_dtype="int8"`` swaps each slot's pages for the quantized layout
+    (int8 payload + per-(token, head) f32 scale pages); ``forward``
+    dispatches on the ``k_scale`` leaf, so callers thread the pytree
+    through unchanged."""
     dtype = dtype or cfg.cdtype
     unsupported = [k for k in cfg.block_pattern
                    if k not in ("attn", "attn_local")]
@@ -142,7 +147,8 @@ def make_paged_cache(cfg: ModelConfig, num_pages: int, block_size: int,
     if cfg.n_encoder_layers:
         raise ValueError("paged KV cache does not support enc-dec models")
     per_sb = {f"slot{i}": {"self": attn.make_paged_self_cache(
-                  cfg, num_pages, block_size, dtype)}
+                  cfg, num_pages, block_size, dtype,
+                  quantized=(kv_dtype == "int8"))}
               for i, kind in enumerate(cfg.block_pattern)}
     n = cfg.n_superblocks
     return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape),

@@ -19,6 +19,7 @@ from typing import Optional, Sequence
 
 from repro.core.boundedness import BoundednessResult, classify_sweep
 from repro.inference.engine import Request, ServeEngine
+from repro.kvcache.paged import PagedKVCache
 from repro.telemetry.metrics import LatencySummary, summarize
 from repro.telemetry.spans import SpanRecorder
 from repro.workload.generator import Workload, sample_requests
@@ -239,10 +240,12 @@ def characterize(cfg, params, *, scenario: str = "chatbot",
 # ------------------------------------------------------------ memory pressure
 @dataclass
 class MemoryPressurePoint:
-    """One (platform, pool size) cell of the memory-pressure sweep."""
+    """One (platform, kv dtype, pool size) cell of the pressure sweep."""
     platform: str
     coupling: str                  # LC (PCIe) | CC (C2C)
     link_gbps: float
+    kv_dtype: str                  # bf16 | int8 page payloads
+    block_bytes: int               # device bytes of ONE pool block
     pool_frac: float               # fraction of the no-pressure pool size
     num_blocks: int
     preemptions: int
@@ -258,6 +261,8 @@ class MemoryPressurePoint:
         return {
             "platform": self.platform, "coupling": self.coupling,
             "link_gbps": round(self.link_gbps, 1),
+            "kv_dtype": self.kv_dtype,
+            "block_bytes": self.block_bytes,
             "pool_frac": self.pool_frac, "num_blocks": self.num_blocks,
             "preemptions": self.preemptions,
             "offload_bytes": self.offload_bytes,
@@ -275,6 +280,7 @@ class MemoryPressurePoint:
 def memory_pressure_sweep(cfg, params, *, scenario: str = "chatbot",
                           platforms: Sequence[str] = ("Intel+H100", "GH200"),
                           pool_fracs: Sequence[float] = (1.0, 0.5, 0.33),
+                          kv_dtypes: Sequence[str] = ("bf16",),
                           max_batch: int = 4, max_len: int = 64,
                           block_size: int = 4, prefill_chunk: Optional[int] = None,
                           n_requests: int = 8, seed: int = 0,
@@ -291,6 +297,13 @@ def memory_pressure_sweep(cfg, params, *, scenario: str = "chatbot",
     (``core.device_model.offload_cost_s``), so the sweep isolates how
     PCIe (LC) vs NVLink-C2C (CC) bandwidth changes the offload tax of
     serving under memory pressure.
+
+    ``kv_dtypes`` adds the quantization axis: every (platform, frac)
+    cell is re-served per dtype with the pool held at the SAME device
+    BYTE budget — an int8 pool fits ``block_bytes(bf16)/block_bytes
+    (int8)`` more blocks (~3.2x for an f32-payload CPU cache at hd=16),
+    so the sweep measures how quantization converts a fixed byte budget
+    into fewer preemptions and less offload traffic.
     """
     from repro.core.device_model import PLATFORMS
     workload = sample_requests(scenario, n_requests, seed=seed,
@@ -303,35 +316,84 @@ def memory_pressure_sweep(cfg, params, *, scenario: str = "chatbot",
     per_seq = -(-longest // block_size)
     full_blocks = max_batch * per_seq
     min_blocks = per_seq + 1                     # one full request + growth
+    # per-dtype bytes of one pool block, measured off a 1-block probe —
+    # byte-budget equivalence below uses REAL leaf sizes, not entry math
+    bb = {}
+    for dt in kv_dtypes:
+        probe = PagedKVCache(cfg, num_blocks=1, block_size=block_size,
+                             max_len=block_size, kv_dtype=dt)
+        probe.make_pages()
+        bb[dt] = probe.pool.block_bytes
     points = []
     for plat in platforms:
         spec = PLATFORMS[plat]
         for frac in pool_fracs:
-            nb = max(min_blocks, int(full_blocks * frac))
-            eng = ServeEngine(cfg, params, max_batch=max_batch,
-                              max_len=max_len, platform=plat,
-                              cache="paged", block_size=block_size,
-                              num_blocks=nb, offload="host",
-                              prefill_chunk=prefill_chunk)
-            eng.run(_requests(workload))
-            st = eng.stats
-            points.append(MemoryPressurePoint(
-                platform=plat, coupling=spec.coupling,
-                link_gbps=spec.link_bw / 1e9, pool_frac=frac,
-                num_blocks=nb, preemptions=st.preemptions,
-                offload_bytes=st.offload_bytes,
-                restore_bytes=st.restore_bytes,
-                modeled_offload_tax_s=st.modeled_offload_tax_s,
-                peak_pool_utilization=st.peak_block_pool_utilization,
-                tokens_out=st.tokens_out, decode_steps=st.decode_steps))
+            nb_native = max(min_blocks, int(full_blocks * frac))
+            byte_budget = nb_native * bb[kv_dtypes[0]]
+            for dt in kv_dtypes:
+                nb = max(min_blocks, byte_budget // bb[dt])
+                eng = ServeEngine(cfg, params, max_batch=max_batch,
+                                  max_len=max_len, platform=plat,
+                                  cache="paged", block_size=block_size,
+                                  num_blocks=nb, offload="host",
+                                  prefill_chunk=prefill_chunk,
+                                  kv_dtype=dt)
+                eng.run(_requests(workload))
+                st = eng.stats
+                points.append(MemoryPressurePoint(
+                    platform=plat, coupling=spec.coupling,
+                    link_gbps=spec.link_bw / 1e9, kv_dtype=dt,
+                    block_bytes=bb[dt], pool_frac=frac,
+                    num_blocks=nb, preemptions=st.preemptions,
+                    offload_bytes=st.offload_bytes,
+                    restore_bytes=st.restore_bytes,
+                    modeled_offload_tax_s=st.modeled_offload_tax_s,
+                    peak_pool_utilization=st.peak_block_pool_utilization,
+                    tokens_out=st.tokens_out,
+                    decode_steps=st.decode_steps))
     return {
         "arch": cfg.name, "scenario": workload.scenario,
         "seed": workload.seed, "n_requests": workload.n,
         "max_batch": max_batch, "max_len": max_len,
         "block_size": block_size, "full_pool_blocks": full_blocks,
         "platforms": list(platforms), "pool_fracs": list(pool_fracs),
+        "kv_dtypes": list(kv_dtypes),
+        "block_bytes": dict(bb),
         "points": [p.row() for p in points],
+        "kv_dtype_deltas": _kv_dtype_deltas(points, kv_dtypes),
     }
+
+
+def _kv_dtype_deltas(points, kv_dtypes) -> list:
+    """Matched (platform, pool_frac) comparisons of each quantized dtype
+    against the native baseline at the same device byte budget: pool
+    capacity in blocks, preemption count, and offload-tax deltas."""
+    if len(kv_dtypes) < 2:
+        return []
+    base_dt = kv_dtypes[0]
+    base = {(p.platform, p.pool_frac): p for p in points
+            if p.kv_dtype == base_dt}
+    rows = []
+    for p in points:
+        if p.kv_dtype == base_dt:
+            continue
+        b = base[(p.platform, p.pool_frac)]
+        rows.append({
+            "platform": p.platform, "pool_frac": p.pool_frac,
+            "kv_dtype": p.kv_dtype, "baseline": base_dt,
+            "capacity_ratio": round(p.num_blocks / b.num_blocks, 2),
+            "preemptions": {base_dt: b.preemptions,
+                            p.kv_dtype: p.preemptions},
+            "offload_bytes": {base_dt: b.offload_bytes,
+                              p.kv_dtype: p.offload_bytes},
+            "offload_tax_delta_us": round(
+                (p.modeled_offload_tax_s - b.modeled_offload_tax_s) * 1e6,
+                1),
+            "peak_pool_utilization": {
+                base_dt: round(b.peak_pool_utilization, 3),
+                p.kv_dtype: round(p.peak_pool_utilization, 3)},
+        })
+    return rows
 
 
 # ------------------------------------------------------------ tp sweep

@@ -72,18 +72,29 @@ def sample_requests(scenario, n_requests: int, *, seed: int = 0,
                     vocab_size: int = 503,
                     prompt_cap: Optional[int] = None,
                     output_cap: Optional[int] = None,
-                    time_scale: float = 1.0) -> Workload:
+                    time_scale: float = 1.0,
+                    shared_prefix: int = 0) -> Workload:
     """Generate a deterministic request list for ``scenario``.
 
     prompt_cap/output_cap clip the scenario's length distributions (so a
     long-prefill scenario stays tractable on a reduced model);
-    time_scale > 1 compresses the arrival timeline by that factor.
+    time_scale > 1 compresses the arrival timeline by that factor;
+    shared_prefix > 0 prepends the SAME sampled system prompt of that
+    many tokens to every request (prefix-affinity routing and engine
+    prefix sharing then see one common key).  prompt_cap applies to the
+    per-request tail, so the shared head is never clipped away.
     """
     if isinstance(scenario, str):
         scenario = get_scenario(scenario)
     if not time_scale > 0:
         raise ValueError(f"time_scale must be > 0, got {time_scale}")
+    if shared_prefix < 0:
+        raise ValueError(f"shared_prefix must be >= 0, got {shared_prefix}")
     rng = np.random.default_rng(seed)
+    # sampled FIRST (only when requested) so shared_prefix=0 workloads
+    # stay byte-identical to pre-option streams
+    head = ([int(t) for t in rng.integers(0, vocab_size, size=shared_prefix)]
+            if shared_prefix else [])
     arrivals = _arrivals(scenario, n_requests, rng, time_scale)
     reqs = []
     for i in range(n_requests):
@@ -93,7 +104,8 @@ def sample_requests(scenario, n_requests: int, *, seed: int = 0,
             plen = min(plen, prompt_cap)
         if output_cap:
             olen = min(olen, output_cap)
-        prompt = [int(t) for t in rng.integers(0, vocab_size, size=plen)]
+        prompt = head + [int(t)
+                         for t in rng.integers(0, vocab_size, size=plen)]
         reqs.append(WorkloadRequest(rid=i, arrival_s=arrivals[i],
                                     prompt=prompt, max_new_tokens=max(olen, 1)))
     name = scenario.name

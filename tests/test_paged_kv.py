@@ -364,3 +364,182 @@ def test_memory_pressure_sweep_lc_vs_cc(small_model):
     assert lc["preemptions"] == cc["preemptions"]
     # ... but the LC link prices it much higher
     assert lc["modeled_offload_tax_us"] > 2 * cc["modeled_offload_tax_us"]
+
+
+# ------------------------------------------------------------ refcounts / CoW
+def test_block_pool_refcount_conservation_with_sharing():
+    """alloc == free with sharing in between: every block physically
+    freed exactly once, refcounts sum to the owned-list entries."""
+    pool = BlockPool(8, 4)
+    a = pool.alloc("a", 4)
+    pool.adopt("b", a[:2])
+    pool.adopt("c", a[:2])
+    assert pool.ref_count(a[0]) == 3 and pool.ref_count(a[2]) == 1
+    assert pool.shared_blocks == 2 and pool.extra_refs == 4
+    total_refs = sum(pool.ref_count(i) for i in range(8))
+    total_owned = sum(len(pool.owned(o)) for o in pool.owners())
+    assert total_refs == total_owned == 8
+    # the donor draining does NOT free shared blocks...
+    assert pool.free("a") == a[2:]
+    assert pool.used_blocks == 2 and pool.ref_count(a[0]) == 2
+    # ...nor does the first sharer...
+    assert pool.free("b") == []
+    assert pool.shared_blocks == 0
+    # ...only the LAST reference frees physically
+    assert pool.free("c") == a[:2]
+    assert pool.used_blocks == 0 and pool.free_blocks == 8
+
+
+def test_block_pool_adopt_and_cow_validation():
+    pool = BlockPool(4, 2)
+    a = pool.alloc("a", 2)
+    with pytest.raises(ValueError):
+        pool.adopt("b", [3])               # free block: not adoptable
+    pool.adopt("b", a)
+    with pytest.raises(ValueError):
+        pool.cow("b", 5)                   # no block at that index
+    old, new = pool.cow("b", 0)
+    assert old == a[0] and new not in a
+    assert pool.owned("b") == [new, a[1]]
+    assert pool.owned("a") == a            # donor list untouched
+    assert pool.ref_count(old) == 1 and pool.ref_count(new) == 1
+    assert pool.cow_copies_total == 1
+    with pytest.raises(ValueError):
+        pool.cow("b", 0)                   # private now: cow is a no-op
+    pool.alloc("c", 1)                     # pool full
+    with pytest.raises(MemoryError):
+        pool.cow("b", 1)                   # a[1] still shared, no free block
+
+
+def test_block_pool_trim_is_refcount_aware():
+    """Spec-rollback trim of a sharer must not zero pages the donor still
+    reads (trim returns only physically-freed ids)."""
+    pool = BlockPool(8, 4)
+    a = pool.alloc("a", 3)
+    pool.adopt("b", a)                     # b shares all of a's blocks
+    assert pool.trim("b", 4) == []         # drops 2 shared refs, frees none
+    assert pool.owned("b") == a[:1]
+    assert pool.ref_count(a[2]) == 1       # back to donor-private
+    pool.free("a")
+    assert pool.trim("b", 0) == a[:1]      # now the last ref frees
+
+
+def test_block_pool_shared_metrics_families():
+    from repro.telemetry.registry import MetricsRegistry
+    reg = MetricsRegistry()
+    pool = BlockPool(8, 4)
+    pool.block_bytes = 100
+    pool.bind_metrics(reg)
+    a = pool.alloc("a", 2)
+    pool.adopt("b", a)
+    snap = {name: reg.get(name).series()[()] for name in
+            ("kv_shared_blocks", "kv_cow_copies_total", "kv_bytes_saved")}
+    assert snap["kv_shared_blocks"] == 2
+    assert snap["kv_bytes_saved"] == 200   # 2 extra refs x block_bytes
+    assert snap["kv_cow_copies_total"] == 0
+    assert pool.peak_shared_blocks == 2
+    pool.cow("b", 0)
+    assert reg.get("kv_cow_copies_total").series()[()] == 1
+    assert reg.get("kv_shared_blocks").series()[()] == 1
+    pool.free("a")
+    pool.free("b")
+    assert reg.get("kv_shared_blocks").series()[()] == 0
+    assert pool.peak_shared_blocks == 2    # high-water mark survives
+
+
+def _mk_shared_requests(cfg, n=6, head=24, max_new=6):
+    """Same sampled system prompt + per-request tail.  Closed loop (all
+    arrivals at 0) keeps scheduling independent of measured step times;
+    rid 0 decodes 3x longer, so it is still live — a valid donor — when
+    slots free up for the requests beyond max_batch."""
+    rng = np.random.default_rng(7)
+    sys_prompt = [int(t) for t in rng.integers(1, cfg.vocab_size, head)]
+    return [Request(rid, prompt=sys_prompt +
+                    [int(t) for t in rng.integers(1, cfg.vocab_size,
+                                                  4 + rid)],
+                    max_new_tokens=(3 * max_new) if rid == 0 else max_new)
+            for rid in range(n)]
+
+
+def test_prefix_sharing_byte_identical_and_refcounts(small_model):
+    """Acceptance: CoW prefix sharing with quantization OFF emits tokens
+    byte-identical to the unshared paged run; adoption fires; refcounts
+    conserve (pool drains to zero)."""
+    cfg, params = small_model
+    base = ServeEngine(cfg, params, max_batch=4, max_len=96, cache="paged",
+                       block_size=8, prefill_chunk=8)
+    t_base = _tokens(base.run(_mk_shared_requests(cfg)))
+    shared = ServeEngine(cfg, params, max_batch=4, max_len=96,
+                         cache="paged", block_size=8, prefill_chunk=8,
+                         share_prefix=True)
+    t_shared = _tokens(shared.run(_mk_shared_requests(cfg)))
+    assert t_shared == t_base
+    assert shared.stats.prefix_adoptions > 0
+    assert shared.stats.shared_prefix_tokens > 0
+    assert shared.kv.pool.peak_shared_blocks > 0
+    # all references released: the pool drains to zero with no leaks
+    assert shared.kv.pool.used_blocks == 0
+    assert shared.kv.pool._refs == {}
+    assert shared.kv.pool.free_blocks == shared.kv.num_blocks
+
+
+@pytest.mark.parametrize("offload", ["none", "host"])
+def test_prefix_sharing_survives_preempt_and_offload(small_model, offload):
+    """Acceptance: sharing stays byte-identical across preempt/recompute
+    and host-offload/restore — evicting a sharer never corrupts a block
+    the donor still reads (physical frees only on last ref)."""
+    cfg, params = small_model
+    free_eng = ServeEngine(cfg, params, max_batch=3, max_len=64,
+                           cache="paged", block_size=8, prefill_chunk=8)
+    t_free = _tokens(free_eng.run(_mk_shared_requests(cfg, max_new=4)))
+    tight = ServeEngine(cfg, params, max_batch=3, max_len=64,
+                        cache="paged", block_size=8, prefill_chunk=8,
+                        share_prefix=True, num_blocks=9, offload=offload)
+    done = tight.run(_mk_shared_requests(cfg, max_new=4))
+    assert _tokens(done) == t_free
+    assert all(r.status == "done" for r in done)
+    assert tight.stats.preemptions > 0
+    assert tight.stats.prefix_adoptions > 0
+    assert tight.kv.pool.used_blocks == 0 and tight.kv.pool._refs == {}
+
+
+def test_prefix_sharing_with_quantization_stacks(small_model):
+    """int8 + share_prefix together: the shared-vs-unshared comparison is
+    still byte-identical AT THE SAME kv_dtype (quantized pages are shared
+    bit-exactly, so adoption adds no extra quantization error)."""
+    cfg, params = small_model
+    outs = {}
+    for share in (False, True):
+        eng = ServeEngine(cfg, params, max_batch=4, max_len=96,
+                          cache="paged", block_size=8, prefill_chunk=8,
+                          kv_dtype="int8", share_prefix=share)
+        outs[share] = _tokens(eng.run(_mk_shared_requests(cfg)))
+        if share:
+            assert eng.stats.prefix_adoptions > 0
+    assert outs[True] == outs[False]
+
+
+def test_cow_write_divergence_preserves_donor_pages(small_model):
+    """Direct CoW exercise: force a sharer to diverge mid-sequence via
+    _cow_protect and check the donor's page contents are preserved and
+    the writer got a private copy."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=32, cache="paged",
+                      block_size=4, share_prefix=True)
+    pool = eng.kv.pool
+    ids = pool.alloc("donor", 2)
+    eng.cache = jax.tree.map(lambda p: p.at[:, ids[0]].set(1), eng.cache)
+    pool.adopt("writer", ids)
+    assert pool.shared_blocks == 2
+    # writer is about to write tokens [0, 4): block 0 must diverge
+    assert eng._cow_protect("writer", 0, 4)
+    assert pool.cow_copies_total == 1
+    w = pool.owned("writer")
+    assert w[0] != ids[0] and w[1] == ids[1]
+    # the copied page carries the donor's contents
+    leaf = jax.tree.leaves(eng.cache)[0]
+    np.testing.assert_array_equal(np.asarray(leaf[:, w[0]]),
+                                  np.asarray(leaf[:, ids[0]]))
+    # donor's view is untouched and still shared on block 1 only
+    assert pool.owned("donor") == ids
+    assert pool.ref_count(ids[0]) == 1 and pool.ref_count(ids[1]) == 2
